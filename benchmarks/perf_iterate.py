@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: lower one (arch x shape) cell under a named
+variant, re-run the roofline analysis, and print the three terms + the
+collective breakdown — the measure step of the hypothesis -> change ->
+measure -> validate loop recorded in EXPERIMENTS.md §Perf.
+
+Variants (composable via comma):
+  baseline        paper-faithful defaults
+  cast_bf16       pre-cast f32 masters to bf16 before the layer scan
+                  (FSDP gathers move bf16, not f32)
+  no_seq_shard    disable sequence-parallel residual carries
+  window_slice    decode reads only the static attention window of the cache
+  remat_dots      save matmul outputs instead of full remat
+  ga<N>           gradient accumulation factor N
+  ep_heads        decode cache prefers kv-head sharding (default already)
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import (GRAD_ACCUM, build_cell, model_flops,
+                                 roofline)
+from repro.launch.mesh import make_production_mesh
+from repro.models import layers as model_layers
+from repro.runtime import sharding as sh
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                multi_pod: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tags = variant.split(",")
+
+    remat = "dots" if "remat_dots" in tags else "full"
+    import re
+    grad_accum = None
+    for t in tags:
+        m = re.fullmatch(r"ga(\d+)", t)
+        if m:
+            grad_accum = int(m.group(1))
+    cast = "cast_bf16" in tags
+    model_layers.set_decode_window_slicing("window_slice" in tags)
+    model_layers.set_ring_kv("ring_kv" in tags)
+
+    with mesh:
+        dp = 1
+        for a in sh.batch_axes(mesh):
+            dp *= mesh.shape[a]
+        model_layers.set_activation_sharding(
+            sh.batch_axes(mesh), dp, "model", mesh.shape["model"],
+            seq_shard="no_seq_shard" not in tags)
+        try:
+            serve_dtype = ("float32" if "serve_f32" in tags else "bfloat16")
+            fn, args = build_cell(arch, shape_name, mesh, remat=remat,
+                                  grad_accum=grad_accum,
+                                  serve_dtype=serve_dtype,
+                                  serve_fsdp="serve_fsdp" in tags,
+                                  fsdp_gather_step="gather_step" in tags,
+                                  cast_params_once=cast)
+            t0 = time.time()
+            compiled = fn.lower(*args).compile()
+            compile_s = time.time() - t0
+            summary = hlo_analysis.analyze(compiled.as_text())
+            ma = compiled.memory_analysis()
+        finally:
+            model_layers.clear_activation_sharding()
+            model_layers.set_decode_window_slicing(False)
+            model_layers.set_ring_kv(False)
+
+    analysis = summary.to_json()
+    r = roofline(analysis, cfg, shape, shape.kind, n_chips)
+    peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "variant": variant,
+        "compile_s": round(compile_s, 1),
+        "peak_gib": round(peak / 2**30, 2),
+        "t_compute_s": r["t_compute_s"],
+        "t_memory_s": r["t_memory_s"],
+        "t_collective_s": r["t_collective_s"],
+        "dominant": r["dominant"],
+        "roofline_fraction": r["roofline_fraction"],
+        "collective_breakdown": {
+            k: round(v / 1e9, 2)
+            for k, v in analysis["collective_bytes_by_op"].items()},
+        "collective_counts": analysis["collective_counts"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    out = {}
+    for variant in args.variants.split("+"):
+        print(f"[perf] {args.arch}/{args.shape} variant={variant}",
+              flush=True)
+        rec = run_variant(args.arch, args.shape, variant, args.multi_pod)
+        out[variant] = rec
+        print(json.dumps(rec, indent=1), flush=True)
+    if len(out) > 1:
+        base = out.get("baseline") or next(iter(out.values()))
+        for v, rec in out.items():
+            dom = base["dominant"]
+            key = f"t_{dom}_s"
+            print(f"{v:28s} {key}={rec[key]:.3f}s "
+                  f"({base[key] / max(rec[key], 1e-12):.2f}x vs baseline) "
+                  f"frac={rec['roofline_fraction']:.4f} "
+                  f"peak={rec['peak_gib']}GiB")
+
+
+if __name__ == "__main__":
+    main()

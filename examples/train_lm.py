@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with the full production stack — supervisor (fault tolerance), atomic
+checkpoints, deterministic data pipeline, AdamW + cosine schedule, int8
+gradient compression with error feedback.
+
+~100M params: mobilellm-125m's published architecture at full width/depth.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+import jax
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models.model_zoo import build
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.supervisor import Supervisor
+from repro.runtime.train_loop import (Trainer, init_train_state,
+                                      make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--compress-grads", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_config("mobilellm_125m")  # 30L x 576d, ~125M params
+    bundle = build(cfg, remat="none")
+    n_params = cfg.num_params()
+    print(f"training {cfg.name}: {n_params / 1e6:.0f}M params, "
+          f"seq {args.seq_len}, batch {args.batch}, {args.steps} steps")
+
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=args.steps // 10,
+                          total_steps=args.steps, weight_decay=0.01)
+    state = init_train_state(bundle, jax.random.key(0), opt_cfg,
+                             compress_grads=args.compress_grads)
+    step = jax.jit(make_train_step(bundle, opt_cfg,
+                                   compress_grads=args.compress_grads))
+    data = SyntheticLM(cfg.vocab_size, args.seq_len, args.batch, seed=0)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ckpt = CheckpointManager(ckpt_dir, keep=2)
+        trainer = Trainer(bundle, opt_cfg, data, state, step, ckpt,
+                          checkpoint_every=100)
+        sup = Supervisor(trainer)
+        report = sup.run(args.steps)
+
+    first = report.losses[0]
+    last = sum(report.losses[-10:]) / 10
+    for rec in trainer.records[:: max(args.steps // 15, 1)]:
+        print(f"  step {rec.step:5d} loss {rec.loss:8.4f} "
+              f"lr {rec.metrics['lr']:.2e} ({rec.wall_s * 1e3:.0f} ms)")
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(restarts={report.restarts})")
+    if args.steps >= 100:  # short smoke runs may not clear warmup
+        assert last < first, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""The paper's end-to-end deployment flow on a complete network:
+extract per-operator workloads from BERT-tiny (the paper's NLP benchmark),
+tune each on the v5e latency model, and report the network-level latency
+against the hand-written library mapping — Figure 7's experiment.
+
+Run:  PYTHONPATH=src:. python examples/tune_workload.py
+"""
+
+import numpy as np
+
+from benchmarks import nets
+from repro.core import (AnalyticRunner, TuningDatabase, V5E,
+                        fixed_library_schedule, tune)
+
+
+def main() -> None:
+    ops = nets.bert_tiny(dtype="int8")
+    runner = AnalyticRunner(V5E)
+    db = TuningDatabase()
+
+    t_tuned = t_fixed = 0.0
+    print(f"{'operator':44s} {'tuned':>10s} {'library':>10s}  speedup")
+    for count, wl in ops:
+        res = tune(wl, V5E, runner, trials=32, seed=0, database=db)
+        fx = runner.run(wl, fixed_library_schedule(wl, V5E))
+        if not np.isfinite(fx):
+            fx = res.best_latency
+        t_tuned += count * res.best_latency
+        t_fixed += count * fx
+        print(f"{wl.key():44s} {res.best_latency * 1e6:9.2f}us "
+              f"{fx * 1e6:9.2f}us  {fx / res.best_latency:6.2f}x  (x{count})")
+
+    print(f"\nbert-tiny total: tuned {t_tuned * 1e6:.1f} us, "
+          f"library {t_fixed * 1e6:.1f} us "
+          f"-> {(1 - t_tuned / t_fixed) * 100:.0f}% latency improvement")
+    print(f"database records: {len(db)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Per-architecture configuration files (assigned pool + paper's own nets)."""
+
+from repro.configs.base import (ArchConfig, ShapeSpec, SHAPES, ARCH_IDS,
+                                EXTRA_IDS, get_config, cells,
+                                supports_long_context)
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "ARCH_IDS", "EXTRA_IDS",
+           "get_config", "cells", "supports_long_context"]

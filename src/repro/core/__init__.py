@@ -1,0 +1,30 @@
+"""Core: TPU-native MetaSchedule — probabilistic tensor-program tuning.
+
+Public API:
+    Workload, Schedule, HardwareConfig / V5E, tune(), TuningDatabase,
+    InterpretRunner / AnalyticRunner, best_schedule()/kernel_params().
+"""
+
+from repro.core.hardware import (HardwareConfig, V5E, V5E_VMEM32, V5E_VMEM64,
+                                 V5E_MXU256, INTERPRET, SWEEP)
+from repro.core.workload import (Workload, matmul, qmatmul, gemv, vmacc,
+                                 attention)
+from repro.core.schedule import Schedule, Decision
+from repro.core.space import space_for, concretize, KernelParams
+from repro.core.sampler import TraceSampler
+from repro.core.cost_model import RidgeCostModel, features
+from repro.core.runner import InterpretRunner, AnalyticRunner, xla_latency
+from repro.core.database import TuningDatabase, global_database
+from repro.core.tuner import tune, TuneResult
+from repro.core.dispatch import (best_schedule, fixed_library_schedule,
+                                 kernel_params)
+
+__all__ = [
+    "HardwareConfig", "V5E", "V5E_VMEM32", "V5E_VMEM64", "V5E_MXU256",
+    "INTERPRET", "SWEEP", "Workload", "matmul", "qmatmul", "gemv", "vmacc",
+    "attention", "Schedule", "Decision", "space_for", "concretize",
+    "KernelParams", "TraceSampler", "RidgeCostModel", "features",
+    "InterpretRunner", "AnalyticRunner", "xla_latency", "TuningDatabase",
+    "global_database", "tune", "TuneResult", "best_schedule",
+    "fixed_library_schedule", "kernel_params",
+]

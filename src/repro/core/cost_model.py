@@ -1,0 +1,102 @@
+"""Learned cost model guiding the evolutionary search.
+
+MetaSchedule trains an XGBoost model on schedule features to rank unmeasured
+candidates. We implement the same role with an online ridge regression on
+hand-rolled schedule/workload features (dependency-free, deterministic).
+The model predicts log-latency; before enough measurements exist it reports
+itself unfitted and the tuner falls back to pure sampling, matching
+MetaSchedule's warm-up phase.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import space as space_lib
+from repro.core.hardware import HardwareConfig
+from repro.core.workload import Workload
+
+
+def features(workload: Workload, hw: HardwareConfig,
+             params: space_lib.KernelParams) -> np.ndarray:
+    """~16-dim feature vector for one concrete schedule."""
+    flops = workload.flops()
+    traffic = space_lib.hbm_traffic_bytes(workload, params)
+    steps = float(np.prod(params.grid))
+    block_elems = float(np.prod(params.block))
+    mxu = hw.mxu_dim
+    bm = params.block[0]
+    bn = params.block[1] if len(params.block) > 1 else 1
+    bk = params.block[2] if len(params.block) > 2 else bn
+    pad_waste = (float(np.prod(params.padded_dims[-3:]))
+                 / max(float(np.prod(workload.dims[-3:])), 1.0))
+    f = [
+        math.log1p(flops),
+        math.log1p(traffic),
+        math.log1p(steps),
+        math.log1p(block_elems),
+        math.log1p(params.vmem_bytes),
+        params.vmem_bytes / hw.vmem_capacity,
+        min(bm, mxu) / mxu,
+        min(bn, mxu) / mxu,
+        min(bk, mxu) / mxu,
+        1.0 if params.accumulate else 0.0,
+        1.0 if params.order in ("mnk", "qk", "rc", "nk") else 0.0,
+        math.log1p(flops / max(traffic, 1.0)),  # arithmetic intensity
+        pad_waste,
+        1.0 if bm % 8 == 0 else 0.0,
+        1.0 if bn % 128 == 0 else 0.0,
+        1.0,
+    ]
+    return np.asarray(f, dtype=np.float64)
+
+
+class RidgeCostModel:
+    """Online ridge regression on log-latency. Refit is O(d^3), d=16."""
+
+    MIN_SAMPLES = 8
+
+    def __init__(self, l2: float = 1e-3):
+        self.l2 = l2
+        self._x: list[np.ndarray] = []
+        self._y: list[float] = []
+        self._w: np.ndarray | None = None
+
+    @property
+    def fitted(self) -> bool:
+        return self._w is not None
+
+    def update(self, feats: np.ndarray, latency_s: float) -> None:
+        if not np.isfinite(latency_s) or latency_s <= 0:
+            return
+        self._x.append(feats)
+        self._y.append(math.log(latency_s))
+        if len(self._x) >= self.MIN_SAMPLES:
+            self._refit()
+
+    def _refit(self) -> None:
+        x = np.stack(self._x)
+        y = np.asarray(self._y)
+        # standardize features for conditioning
+        self._mu = x.mean(axis=0)
+        self._sd = x.std(axis=0) + 1e-9
+        xs = (x - self._mu) / self._sd
+        d = xs.shape[1]
+        a = xs.T @ xs + self.l2 * np.eye(d)
+        b = xs.T @ (y - y.mean())
+        self._ymean = y.mean()
+        self._w = np.linalg.solve(a, b)
+
+    def predict(self, feats: np.ndarray) -> float:
+        """Predicted log-latency (lower is better)."""
+        if self._w is None:
+            return 0.0
+        xs = (feats - self._mu) / self._sd
+        return float(xs @ self._w + self._ymean)
+
+    def rank(self, feats_batch: list[np.ndarray]) -> np.ndarray:
+        """Indices sorted by predicted latency, ascending."""
+        preds = np.asarray([self.predict(f) for f in feats_batch])
+        return np.argsort(preds, kind="stable")

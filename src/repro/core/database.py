@@ -1,0 +1,96 @@
+"""Tuning-record database.
+
+Persists every measured (workload, hardware, schedule, latency) record and
+answers best-schedule lookups. This is the deployable artifact of a tuning
+run — the analogue of the tuned TVM module the paper ships to the board:
+after tuning once per hardware config, the framework dispatches every matching
+op through the stored best schedule with no further search.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+
+class TuningDatabase:
+    def __init__(self, path: str | None = None):
+        self.path = path
+        # key -> list of {schedule, latency, runner}
+        self.records: dict[str, list[dict[str, Any]]] = {}
+        self.workloads: dict[str, dict] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    @staticmethod
+    def record_key(workload: Workload, hw_name: str) -> str:
+        return f"{workload.key()}@{hw_name}"
+
+    # ---- updates ---------------------------------------------------------------
+    def add(self, workload: Workload, hw_name: str, schedule: Schedule,
+            latency_s: float, runner_name: str) -> None:
+        key = self.record_key(workload, hw_name)
+        self.workloads[key] = workload.to_json()
+        self.records.setdefault(key, []).append({
+            "schedule": schedule.to_json(),
+            "latency_s": latency_s,
+            "runner": runner_name,
+        })
+
+    # ---- queries ---------------------------------------------------------------
+    def best(self, workload: Workload,
+             hw_name: str) -> tuple[Schedule, float] | None:
+        key = self.record_key(workload, hw_name)
+        recs = [r for r in self.records.get(key, ())
+                if r["latency_s"] == r["latency_s"]
+                and r["latency_s"] != float("inf")]
+        if not recs:
+            return None
+        top = min(recs, key=lambda r: r["latency_s"])
+        return Schedule.from_json(top["schedule"]), top["latency_s"]
+
+    def history(self, workload: Workload, hw_name: str) -> list[dict]:
+        return list(self.records.get(self.record_key(workload, hw_name), ()))
+
+    def __len__(self):
+        return sum(len(v) for v in self.records.values())
+
+    # ---- persistence --------------------------------------------------------------
+    def save(self, path: str | None = None) -> None:
+        path = path or self.path
+        if path is None:
+            raise ValueError("no path configured")
+        payload = {"records": self.records, "workloads": self.workloads}
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)  # atomic
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            payload = json.load(f)
+        self.records = payload.get("records", {})
+        self.workloads = payload.get("workloads", {})
+
+
+_GLOBAL: TuningDatabase | None = None
+
+
+def global_database() -> TuningDatabase:
+    """Process-wide database; path overridable via REPRO_TUNING_DB."""
+    global _GLOBAL
+    if _GLOBAL is None:
+        path = os.environ.get("REPRO_TUNING_DB",
+                              os.path.join(os.path.dirname(__file__),
+                                           "..", "..", "..", "tuned",
+                                           "database.json"))
+        path = os.path.abspath(path)
+        _GLOBAL = TuningDatabase(path if os.path.exists(path) else None)
+        _GLOBAL.path = path
+    return _GLOBAL

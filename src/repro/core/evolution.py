@@ -1,0 +1,96 @@
+"""Evolutionary search over schedule traces, guided by the cost model.
+
+MetaSchedule's search: keep a population of traces, mutate/crossover, rank
+with the learned cost model, measure the top predicted candidates, repeat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import space as space_lib
+from repro.core.cost_model import RidgeCostModel, features
+from repro.core.hardware import HardwareConfig
+from repro.core.sampler import TraceSampler
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass
+class EvolutionarySearch:
+    workload: Workload
+    hw: HardwareConfig
+    space: dict[str, tuple]
+    sampler: TraceSampler
+    population_size: int = 32
+    mutation_rate: float = 0.6
+    crossover_rate: float = 0.2
+    immigrant_rate: float = 0.2  # fresh random traces per generation
+
+    def __post_init__(self):
+        self.population: list[Schedule] = []
+
+    # -------------------------------------------------------------------------
+    def _valid(self, s: Schedule) -> bool:
+        return space_lib.concretize(self.workload, self.hw, s).valid
+
+    def seed_population(self, measured: list[Schedule]) -> None:
+        pop = [s for s in measured if self._valid(s)]
+        tries = 0
+        while len(pop) < self.population_size and tries < 20 * self.population_size:
+            s = self.sampler.sample(self.space)
+            tries += 1
+            if self._valid(s):
+                pop.append(s)
+        self.population = pop[: self.population_size]
+
+    def evolve(self, cost_model: RidgeCostModel,
+               elites: list[Schedule]) -> None:
+        """One generation: elites + mutants + crossovers + immigrants,
+        de-duplicated, ranked by the cost model."""
+        rng = self.sampler.rng
+        parents = elites + self.population
+        children: list[Schedule] = list(elites)
+        budget = 4 * self.population_size
+        while len(children) < budget:
+            r = rng.random()
+            if r < self.immigrant_rate or not parents:
+                cand = self.sampler.sample(self.space)
+            elif r < self.immigrant_rate + self.crossover_rate and len(parents) >= 2:
+                i, j = rng.choice(len(parents), size=2, replace=False)
+                cand = self.sampler.crossover(parents[int(i)], parents[int(j)])
+            else:
+                p = parents[int(rng.integers(len(parents)))]
+                cand = self.sampler.mutate(p, n_mutations=1 + int(rng.integers(2)))
+            if self._valid(cand):
+                children.append(cand)
+        # de-dup, rank by predicted latency
+        seen, uniq = set(), []
+        for c in children:
+            sig = c.signature()
+            if sig not in seen:
+                seen.add(sig)
+                uniq.append(c)
+        if cost_model.fitted:
+            feats = [features(self.workload, self.hw,
+                              space_lib.concretize(self.workload, self.hw, c))
+                     for c in uniq]
+            order = cost_model.rank(feats)
+            uniq = [uniq[int(i)] for i in order]
+        self.population = uniq[: self.population_size]
+
+    def propose(self, n: int, exclude: set) -> list[Schedule]:
+        """Top-n unmeasured candidates (epsilon-greedy: a random tail slot)."""
+        out = []
+        for c in self.population:
+            if c.signature() not in exclude:
+                out.append(c)
+            if len(out) >= n:
+                break
+        tries = 0
+        while len(out) < n and tries < 50 * n:
+            c = self.sampler.sample(self.space)
+            tries += 1
+            if c.signature() not in exclude and self._valid(c):
+                out.append(c)
+        return out

@@ -1,0 +1,132 @@
+"""Candidate measurement runners.
+
+The paper measures candidates on two kinds of targets: FPGA-implemented SoCs
+(microTVM) and a real board (TVM runtime), plus QEMU for trace analysis. In
+this CPU-only container the corresponding pair is:
+
+- :class:`InterpretRunner` — builds the candidate Pallas kernel with
+  ``interpret=True`` and measures wall-clock on the host. Real, noisy,
+  hardware-in-the-loop measurement (the FPGA analogue at container scale).
+- :class:`AnalyticRunner` — deterministic TPU-v5e latency model: a roofline
+  over {MXU compute, HBM traffic} with per-grid-step overhead and MXU
+  utilization derating. This is the stand-in for real-TPU measurement and
+  the model behind the §Roofline numbers (the QEMU analogue).
+
+Both satisfy the same ``Runner`` protocol; ``tuner.tune`` is agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Protocol
+
+import numpy as np
+
+from repro.core import space as space_lib
+from repro.core.hardware import HardwareConfig
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+INVALID = float("inf")
+
+
+class Runner(Protocol):
+    name: str
+    hw: HardwareConfig
+
+    def run(self, workload: Workload, schedule: Schedule) -> float:
+        """Latency in seconds; inf if the candidate is invalid."""
+        ...
+
+
+@dataclasses.dataclass
+class InterpretRunner:
+    hw: HardwareConfig
+    repeats: int = 3
+    warmup: int = 1
+    name: str = "interpret"
+
+    def run(self, workload: Workload, schedule: Schedule) -> float:
+        from repro import kernels  # lazy: avoid import cycle
+
+        params = space_lib.concretize(workload, self.hw, schedule)
+        if not params.valid:
+            return INVALID
+        try:
+            fn = kernels.build(workload, params, interpret=True)
+        except Exception:
+            return INVALID
+        inputs = workload.example_inputs()
+        try:
+            out = fn(*inputs)
+            out.block_until_ready()
+        except Exception:
+            return INVALID
+        for _ in range(self.warmup):
+            fn(*inputs).block_until_ready()
+        best = INVALID
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            fn(*inputs).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+
+@dataclasses.dataclass
+class AnalyticRunner:
+    """Deterministic v5e latency model (documented in DESIGN.md §5)."""
+
+    hw: HardwareConfig
+    name: str = "analytic"
+
+    def run(self, workload: Workload, schedule: Schedule) -> float:
+        params = space_lib.concretize(workload, self.hw, schedule)
+        return self.latency(workload, params)
+
+    def latency(self, workload: Workload,
+                params: space_lib.KernelParams) -> float:
+        if not params.valid:
+            return INVALID
+        hw = self.hw
+        # --- compute term with MXU utilization derating ---------------------
+        flops = workload.flops()
+        # padded-shape waste counts as issued compute
+        pad = (float(np.prod(params.padded_dims))
+               / max(float(np.prod(workload.dims)), 1.0))
+        bm = params.block[0]
+        bn = params.block[1] if len(params.block) > 1 else hw.mxu_dim
+        bk = params.block[2] if len(params.block) > 2 else bn
+        if params.op in ("matmul", "qmatmul", "gemv", "attention"):
+            util = (min(bm, hw.mxu_dim) / hw.mxu_dim) \
+                 * (min(bn, hw.mxu_dim) / hw.mxu_dim) \
+                 * (min(bk, hw.mxu_dim) / hw.mxu_dim)
+            util = max(util, 1e-3) ** (1.0 / 3.0)  # geometric-mean derate
+        else:
+            util = 1.0  # VPU elementwise
+        t_compute = flops * pad / (hw.peak_flops(workload.dtype) * util)
+        # --- memory term ------------------------------------------------------
+        traffic = space_lib.hbm_traffic_bytes(workload, params)
+        t_memory = traffic / hw.hbm_bandwidth
+        # --- grid overhead ----------------------------------------------------
+        steps = float(np.prod(params.grid))
+        t_overhead = steps * hw.grid_step_overhead_s
+        # DMA/compute overlap: roofline max, plus fixed per-step cost.
+        return max(t_compute, t_memory) + t_overhead
+
+
+def xla_latency(workload: Workload, repeats: int = 3) -> float:
+    """Measure the XLA default lowering of the op (the paper's
+    GCC/LLVM-autovectorization baseline) with wall-clock on this host."""
+    from repro import kernels
+
+    fn = kernels.xla_baseline(workload)
+    inputs = workload.example_inputs()
+    out = fn(*inputs)
+    out.block_until_ready()
+    best = INVALID
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*inputs).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -1,0 +1,53 @@
+"""Probabilistic sampling and mutation of schedule traces."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedule import Decision, Schedule
+
+
+class TraceSampler:
+    """Draws and perturbs schedule traces from a decision space.
+
+    This is the probabilistic-program part: a schedule is the recorded trace
+    of independent categorical draws, one per decision site; mutation
+    resamples a random subset of sites in place (MetaSchedule's
+    trace-mutation operator).
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, space: dict[str, tuple]) -> Schedule:
+        decisions = []
+        for name, candidates in space.items():
+            idx = int(self.rng.integers(len(candidates)))
+            decisions.append(Decision(name, candidates[idx], tuple(candidates)))
+        return Schedule(tuple(decisions))
+
+    def mutate(self, schedule: Schedule, n_mutations: int = 1) -> Schedule:
+        names = [d.name for d in schedule.decisions if len(d.candidates) > 1]
+        if not names:
+            return schedule
+        n = min(n_mutations, len(names))
+        picked = self.rng.choice(len(names), size=n, replace=False)
+        out = schedule
+        for i in picked:
+            name = names[int(i)]
+            cands = next(d.candidates for d in schedule.decisions
+                         if d.name == name)
+            current = out[name]
+            alternatives = [c for c in cands if c != current]
+            if alternatives:
+                choice = alternatives[int(self.rng.integers(len(alternatives)))]
+                out = out.replace(name, choice)
+        return out
+
+    def crossover(self, a: Schedule, b: Schedule) -> Schedule:
+        """Uniform crossover of two traces over the same space."""
+        decisions = []
+        for da, db in zip(a.decisions, b.decisions):
+            src = da if self.rng.random() < 0.5 else db
+            decisions.append(Decision(da.name, src.choice, da.candidates))
+        return Schedule(tuple(decisions))

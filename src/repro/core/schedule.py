@@ -1,0 +1,102 @@
+"""Schedules as probabilistic-program traces.
+
+MetaSchedule represents a candidate as the trace of its sampled scheduling
+decisions; mutation and replay operate on the trace, not on generated code.
+We keep the same structure: a :class:`Schedule` is an ordered map of named
+:class:`Decision`s, each recording the chosen value *and* the candidate set
+it was drawn from (so mutation can resample any single decision in place).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    name: str
+    choice: Any
+    candidates: tuple = ()
+
+    def to_json(self):
+        return {"name": self.name, "choice": self.choice,
+                "candidates": list(self.candidates)}
+
+    @staticmethod
+    def from_json(d):
+        return Decision(d["name"], _detuple(d["choice"]),
+                        tuple(_detuple(c) for c in d.get("candidates", [])))
+
+
+def _detuple(x):
+    # JSON round-trips tuples as lists; normalize back for hashing/eq.
+    if isinstance(x, list):
+        return tuple(_detuple(v) for v in x)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """An immutable trace of scheduling decisions."""
+
+    decisions: tuple[Decision, ...]
+
+    # ---- access -------------------------------------------------------------
+    def __getitem__(self, name: str) -> Any:
+        for d in self.decisions:
+            if d.name == name:
+                return d.choice
+        raise KeyError(name)
+
+    def get(self, name: str, default: Any = None) -> Any:
+        for d in self.decisions:
+            if d.name == name:
+                return d.choice
+        return default
+
+    def names(self) -> list[str]:
+        return [d.name for d in self.decisions]
+
+    def as_dict(self) -> dict[str, Any]:
+        return {d.name: d.choice for d in self.decisions}
+
+    # ---- functional updates --------------------------------------------------
+    def replace(self, name: str, choice: Any) -> "Schedule":
+        out = []
+        found = False
+        for d in self.decisions:
+            if d.name == name:
+                out.append(Decision(name, choice, d.candidates))
+                found = True
+            else:
+                out.append(d)
+        if not found:
+            raise KeyError(name)
+        return Schedule(tuple(out))
+
+    # ---- identity / io --------------------------------------------------------
+    def signature(self) -> tuple:
+        return tuple((d.name, d.choice) for d in self.decisions)
+
+    def __hash__(self):
+        return hash(self.signature())
+
+    def __eq__(self, other):
+        return isinstance(other, Schedule) and self.signature() == other.signature()
+
+    def to_json(self):
+        return [d.to_json() for d in self.decisions]
+
+    @staticmethod
+    def from_json(items: Iterable[dict]) -> "Schedule":
+        return Schedule(tuple(Decision.from_json(d) for d in items))
+
+    @staticmethod
+    def fixed(**choices: Any) -> "Schedule":
+        """A schedule with no recorded candidate sets (hand-written / library)."""
+        return Schedule(tuple(Decision(k, v, (v,)) for k, v in choices.items()))
+
+    def __repr__(self):
+        inner = ", ".join(f"{d.name}={d.choice}" for d in self.decisions)
+        return f"Schedule({inner})"

@@ -1,0 +1,268 @@
+"""Design-space generation and schedule concretization.
+
+``space_for`` builds the decision space of a workload on a hardware config —
+the support of the probabilistic program MetaSchedule would sample. The
+decisions compose the intrinsic-variant choice (the paper's multi-VL
+registration) with tile-shape refinements, loop order, and the
+accumulate-in-registers choice that Algorithm 1 hinges on.
+
+``concretize`` replays a schedule trace into :class:`KernelParams` — the
+static parameters a Pallas kernel is built from — and validates it against
+the hardware (VMEM fit, alignment), marking invalid candidates exactly as
+MetaSchedule's postprocessors reject illegal traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import intrinsics
+from repro.core.hardware import HardwareConfig
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload, dtype_bytes
+
+SCALES = (1.0, 0.5, 0.25)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelParams:
+    """Concrete static parameters for one kernel instantiation."""
+
+    op: str
+    dims: tuple[int, ...]
+    padded_dims: tuple[int, ...]
+    block: tuple[int, ...]
+    grid: tuple[int, ...]
+    order: str  # grid-major order, e.g. "mnk" | "nmk"
+    accumulate: bool  # True: VMEM accumulator, store once (Algorithm 1)
+    dtype: str
+    out_dtype: str
+    vmem_bytes: int
+    valid: bool
+    why_invalid: str = ""
+
+
+def space_for(workload: Workload, hw: HardwareConfig) -> dict[str, tuple]:
+    """Decision name -> candidate tuple."""
+    variants = intrinsics.variants_for(workload, hw)
+    names = tuple(v.name for v in variants)
+    if workload.op in ("matmul", "qmatmul"):
+        return {
+            "variant": names,
+            "m_scale": SCALES,
+            "n_scale": SCALES,
+            "k_scale": SCALES,
+            "order": ("mnk", "nmk"),
+            "accumulate": (True, False),
+        }
+    if workload.op == "gemv":
+        return {
+            "variant": names,
+            "k_scale": SCALES,
+            "accumulate": (True, False),
+        }
+    if workload.op == "vmacc":
+        return {
+            "variant": names,
+            "r_scale": SCALES,
+        }
+    if workload.op == "attention":
+        return {
+            "variant": names,
+        }
+    raise ValueError(f"unknown op {workload.op}")
+
+
+def _variant_block(workload: Workload, hw: HardwareConfig, name: str):
+    for v in intrinsics.variants_for(workload, hw):
+        if v.name == name:
+            return v.block
+    raise KeyError(f"variant {name} not registered for {workload.key()}")
+
+
+def _scaled(base: int, scale: float, align: int, cap: int) -> int:
+    b = max(align, int(base * scale) // align * align)
+    return min(b, max(align, round_up(cap, align)))
+
+
+def concretize(workload: Workload, hw: HardwareConfig,
+               schedule: Schedule) -> KernelParams:
+    op, dims = workload.op, workload.dims
+    ib = dtype_bytes(workload.dtype)
+    ob = dtype_bytes(workload.out_dtype)
+    lane = hw.lane_align(workload.dtype)
+    sub = hw.sublane_align(workload.dtype)
+    try:
+        base = _variant_block(workload, hw, schedule["variant"])
+    except KeyError:
+        # A schedule tuned for another hardware config can reference a
+        # variant not registered here (e.g. a VMEM-128 tile on a VMEM-32
+        # part) — an invalid candidate, not an error (paper Fig. 4: foreign
+        # schedules don't transfer).
+        return KernelParams(op, dims, dims, (1,) * len(dims),
+                            (1,) * len(dims), "", True, workload.dtype,
+                            workload.out_dtype, 0, False,
+                            f"variant {schedule['variant']} not registered")
+
+    if op in ("matmul", "qmatmul"):
+        m, n, k = dims
+        bm = _scaled(base[0], schedule.get("m_scale", 1.0), sub, m)
+        bn = _scaled(base[1], schedule.get("n_scale", 1.0), lane, n)
+        bk = _scaled(base[2], schedule.get("k_scale", 1.0), lane, k)
+        pm, pn, pk = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+        grid_mn = (pm // bm, pn // bn)
+        order = schedule.get("order", "mnk")
+        if order == "nmk":
+            grid = (grid_mn[1], grid_mn[0], pk // bk)
+        else:
+            grid = (grid_mn[0], grid_mn[1], pk // bk)
+        acc = bool(schedule.get("accumulate", True))
+        acc_bytes = bm * bn * 4  # f32 accumulator
+        vmem = bm * bk * ib + bk * bn * ib + bm * bn * ob + acc_bytes
+        params = KernelParams(op, dims, (pm, pn, pk), (bm, bn, bk), grid,
+                              order, acc, workload.dtype, workload.out_dtype,
+                              vmem, True)
+    elif op == "gemv":
+        n, k = dims
+        bn = max(1, min(base[0], round_up(n, 1)))
+        if bn > 1:
+            bn = _scaled(base[0], 1.0, min(lane, base[0]), n)
+        bk = _scaled(base[1], schedule.get("k_scale", 1.0), lane, k)
+        pn, pk = round_up(n, bn), round_up(k, bk)
+        grid = (pn // bn, pk // bk)
+        acc = bool(schedule.get("accumulate", True))
+        vmem = bk * ib + bk * bn * ib + bn * ob + bn * 4
+        params = KernelParams(op, dims, (pn, pk), (bn, bk), grid, "nk", acc,
+                              workload.dtype, workload.out_dtype, vmem, True)
+    elif op == "vmacc":
+        r, c = dims
+        br = _scaled(base[0], schedule.get("r_scale", 1.0), sub, r)
+        bc = _scaled(base[1], 1.0, lane, c)
+        pr, pc = round_up(r, br), round_up(c, bc)
+        grid = (pr // br, pc // bc)
+        vmem = 4 * br * bc * max(ib, ob)
+        params = KernelParams(op, dims, (pr, pc), (br, bc), grid, "rc", True,
+                              workload.dtype, workload.out_dtype, vmem, True)
+    elif op == "attention":
+        b, hq, hkv, ql, kl, d = dims
+        bq, bkv = base
+        bq = min(bq, round_up(ql, lane) if ql >= lane else round_up(ql, sub))
+        bkv = min(bkv, round_up(kl, lane))
+        pq, pkv = round_up(ql, bq), round_up(kl, bkv)
+        pd = round_up(d, lane)
+        grid = (b * hq, pq // bq, pkv // bkv)
+        # live blocks: q, k, v, o(f32), running m/l, s (bq x bkv f32)
+        vmem = (bq * pd * ib + 2 * bkv * pd * ib + bq * pd * 4
+                + 2 * bq * 128 * 4 + bq * bkv * 4)
+        order = "qk_causal" if "causal" in workload.tags else "qk"
+        params = KernelParams(op, dims, (b, hq, hkv, pq, pkv, pd), (bq, bkv),
+                              grid, order, True, workload.dtype,
+                              workload.out_dtype, vmem, True)
+    else:
+        raise ValueError(f"unknown op {op}")
+
+    # ---- validation (MetaSchedule postproc analogue) -------------------------
+    why = ""
+    if params.vmem_bytes > hw.vmem_capacity * 0.9:
+        why = (f"vmem footprint {params.vmem_bytes} exceeds 90% of "
+               f"{hw.vmem_capacity}")
+    for g in params.grid:
+        if g <= 0:
+            why = f"empty grid {params.grid}"
+    if why:
+        params = dataclasses.replace(params, valid=False, why_invalid=why)
+    return params
+
+
+def instruction_census(workload: Workload, params: KernelParams) -> dict:
+    """Schedule-derived block-instruction counts — the analogue of the
+    paper's QEMU vector-instruction census (Fig. 5/9): per grid step the
+    kernel issues block loads, one MAC-group, and stores only where the
+    schedule says so. The store *fraction* is the paper's headline metric
+    (tuned schedules keep it <1%; store-heavy library schedules don't)."""
+    if params.op in ("matmul", "qmatmul", "gemv"):
+        if params.op == "gemv":
+            gn, gk = params.grid
+            gm = 1
+        else:
+            a, b_, gk = params.grid
+            gm, gn = (b_, a) if params.order == "nmk" else (a, b_)
+            if not params.accumulate:  # k-major grid layout
+                gk, gm, gn = params.grid
+        steps = gm * gn * gk
+        loads = 2 * steps  # x-block + w-block per step
+        macs = steps
+        config = steps  # per-step grid/DMA setup (vsetvl analogue)
+        if params.accumulate:
+            stores = gm * gn
+        else:
+            stores = steps  # partial product written back every k step
+            loads += steps - gm * gn  # partials re-read on revisit
+    elif params.op == "vmacc":
+        steps = params.grid[0] * params.grid[1]
+        loads, macs, stores, config = 3 * steps, steps, steps, steps
+    elif params.op == "attention":
+        bh, gq, gkv = params.grid
+        steps = bh * gq * gkv
+        loads = 3 * steps  # q, k, v blocks (q stays resident per row)
+        macs = 2 * steps  # qk^T and pv
+        stores = bh * gq  # output tile written once at the last kv step
+        config = steps
+    else:
+        raise ValueError(params.op)
+    total = loads + stores + macs + config
+    return {"loads": loads, "stores": stores, "macs": macs,
+            "config": config, "total": total,
+            "store_fraction": stores / max(total, 1)}
+
+
+def hbm_traffic_bytes(workload: Workload, params: KernelParams) -> float:
+    """Modelled HBM traffic for a concrete schedule (feeds the analytic
+    runner and the cost-model features).
+
+    For matmul with an (m, n, k) grid and VMEM accumulation, each x-block is
+    re-read once per n-step and each w-block once per m-step; the output is
+    written once. Without accumulation (the muRISCV-NN-style store-happy
+    variant) partial outputs are written and re-read every k-step.
+    """
+    ib = dtype_bytes(workload.dtype)
+    ob = dtype_bytes(workload.out_dtype)
+    if params.op in ("matmul", "qmatmul"):
+        pm, pn, pk = params.padded_dims
+        bm, bn, bk = params.block
+        x_reads = pm * pk * (pn // bn)
+        w_reads = pk * pn * (pm // bm)
+        if params.accumulate:
+            out_traffic = ob * pm * pn
+        else:
+            out_traffic = (2 * 4 * pm * pn * (pk // bk - 1)) + ob * pm * pn
+        return ib * (x_reads + w_reads) + out_traffic
+    if params.op == "gemv":
+        pn, pk = params.padded_dims
+        bn, bk = params.block
+        x_reads = pk * (pn // bn)
+        w_reads = pn * pk
+        if params.accumulate:
+            out_traffic = ob * pn
+        else:
+            out_traffic = 2 * 4 * pn * (pk // bk - 1) + ob * pn
+        return ib * (x_reads + w_reads) + out_traffic
+    if params.op == "vmacc":
+        pr, pc = params.padded_dims
+        return (3 * ib + ob) * pr * pc
+    if params.op == "attention":
+        b, hq, hkv, pq, pkv, d = params.padded_dims
+        bq, bkv = params.block
+        q = b * hq * pq * d
+        kv = 2 * b * hkv * pkv * d * (pq // bq)  # k/v re-read per q block
+        o = b * hq * pq * d
+        return ib * (q + kv) + ob * o
+    raise ValueError(params.op)

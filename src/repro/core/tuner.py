@@ -1,0 +1,105 @@
+"""The tuning loop — the paper's three-step MetaSchedule cycle.
+
+Per iteration: (1) generate candidates by probabilistic sampling /
+evolutionary mutation of schedule traces, (2) build + measure each candidate
+on the runner (FPGA/board in the paper; interpret-mode or analytic model
+here), (3) feed the measured latency back into the cost model that ranks the
+next generation. The best measured schedule is committed to the database.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.core import space as space_lib
+from repro.core.cost_model import RidgeCostModel, features
+from repro.core.database import TuningDatabase
+from repro.core.evolution import EvolutionarySearch
+from repro.core.hardware import HardwareConfig
+from repro.core.runner import Runner
+from repro.core.sampler import TraceSampler
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass
+class TuneResult:
+    workload: Workload
+    hw: HardwareConfig
+    best_schedule: Schedule | None
+    best_latency: float
+    history: list[tuple[Schedule, float]]
+    trials: int
+    wall_time_s: float
+
+    @property
+    def best_params(self):
+        if self.best_schedule is None:
+            return None
+        return space_lib.concretize(self.workload, self.hw, self.best_schedule)
+
+
+def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
+         trials: int = 64, seed: int = 0,
+         database: TuningDatabase | None = None,
+         warmup_fraction: float = 0.25,
+         batch: int = 4,
+         log: Callable[[str], None] | None = None) -> TuneResult:
+    t_start = time.perf_counter()
+    space = space_lib.space_for(workload, hw)
+    sampler = TraceSampler(seed)
+    cost_model = RidgeCostModel()
+    search = EvolutionarySearch(workload, hw, space, sampler)
+
+    measured: dict[tuple, float] = {}
+    history: list[tuple[Schedule, float]] = []
+    best_s: Schedule | None = None
+    best_l = float("inf")
+
+    def measure(s: Schedule) -> None:
+        nonlocal best_s, best_l
+        sig = s.signature()
+        if sig in measured:
+            return
+        latency = runner.run(workload, s)
+        measured[sig] = latency
+        history.append((s, latency))
+        params = space_lib.concretize(workload, hw, s)
+        if params.valid and latency != float("inf"):
+            cost_model.update(features(workload, hw, params), latency)
+            if database is not None:
+                database.add(workload, hw.name, s, latency, runner.name)
+            if latency < best_l:
+                best_s, best_l = s, latency
+                if log:
+                    log(f"  trial {len(history):3d}: {latency*1e6:10.1f} us  "
+                        f"<- new best {s.as_dict()}")
+
+    # Phase 1 — probabilistic sampling warm-up.
+    n_warmup = max(4, int(trials * warmup_fraction))
+    tries = 0
+    while len(history) < min(n_warmup, trials) and tries < 50 * trials:
+        tries += 1
+        s = sampler.sample(space)
+        if space_lib.concretize(workload, hw, s).valid:
+            measure(s)
+
+    # Phase 2 — evolutionary search guided by the cost model.
+    search.seed_population([s for s, _ in history])
+    while len(history) < trials:
+        elites = [s for s, l in sorted(history, key=lambda r: r[1])[:4]
+                  if l != float("inf")]
+        search.evolve(cost_model, elites)
+        proposals = search.propose(min(batch, trials - len(history)),
+                                   exclude=set(measured))
+        if not proposals:
+            break
+        for s in proposals:
+            measure(s)
+
+    if database is not None and database.path:
+        database.save()
+    return TuneResult(workload, hw, best_s, best_l, history, len(history),
+                      time.perf_counter() - t_start)

@@ -1,0 +1,67 @@
+"""Pallas micro-kernels + the build/reference dispatch used by the tuner.
+
+Each kernel package has:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+  ops.py    — jitted public wrapper (padding, dtype policy),
+  ref.py    — pure-jnp oracle used by tests and as the XLA baseline.
+
+``build(workload, params)`` is the tuner's builder: it turns a concrete
+schedule (:class:`KernelParams`) into a measurable callable — the analogue
+of MetaSchedule emitting C/LLVM for one candidate.
+"""
+
+from __future__ import annotations
+
+from repro.core.space import KernelParams, concretize
+from repro.core.workload import Workload
+
+
+def build(workload: Workload, params: KernelParams, interpret: bool = True):
+    """Concrete schedule -> jitted callable over ``workload.example_inputs``."""
+    if params.op in ("matmul",):
+        from repro.kernels.matmul import ops
+        return ops.build(params, interpret=interpret)
+    if params.op == "qmatmul":
+        from repro.kernels.qmatmul import ops
+        return ops.build(params, interpret=interpret)
+    if params.op == "gemv":
+        from repro.kernels.gemv import ops
+        return ops.build(params, interpret=interpret)
+    if params.op == "vmacc":
+        from repro.kernels.vmacc import ops
+        return ops.build(params, interpret=interpret)
+    if params.op == "attention":
+        from repro.kernels.flash_attention import ops
+        return ops.build(params, interpret=interpret)
+    raise ValueError(f"no kernel registered for op {params.op}")
+
+
+def reference(workload: Workload):
+    """The pure-jnp oracle for an op family."""
+    if workload.op == "matmul":
+        from repro.kernels.matmul.ref import matmul_ref
+        return matmul_ref
+    if workload.op == "qmatmul":
+        from repro.kernels.qmatmul.ref import qmatmul_ref
+        return qmatmul_ref
+    if workload.op == "gemv":
+        from repro.kernels.gemv.ref import gemv_ref
+        return gemv_ref
+    if workload.op == "vmacc":
+        from repro.kernels.vmacc.ref import vmacc_ref
+        return vmacc_ref
+    if workload.op == "attention":
+        from repro.kernels.flash_attention.ref import attention_ref
+        import functools
+        return functools.partial(attention_ref,
+                                 causal="causal" in workload.tags)
+    raise ValueError(f"no reference for op {workload.op}")
+
+
+def xla_baseline(workload: Workload):
+    """XLA's own lowering of the op — the paper's compiler-autovectorization
+    baseline (jitted jnp, no Pallas)."""
+    import jax
+
+    ref = reference(workload)
+    return jax.jit(ref)

@@ -1,0 +1,34 @@
+"""Jitted wrapper for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.space import KernelParams
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def build(params: KernelParams, interpret: bool = True):
+    b, hq, hkv, lq, lkv, d = params.dims
+    _, _, _, pq, pkv, pd = params.padded_dims
+    compute_dtype = jnp.dtype(params.dtype)
+
+    @jax.jit
+    def f(q, k, v):
+        q = q.astype(compute_dtype).reshape(b * hq, lq, d)
+        k = k.astype(compute_dtype).reshape(b * hkv, lkv, d)
+        v = v.astype(compute_dtype).reshape(b * hkv, lkv, d)
+        q = jnp.pad(q, ((0, 0), (0, pq - lq), (0, pd - d)))
+        k = jnp.pad(k, ((0, 0), (0, pkv - lkv), (0, pd - d)))
+        v = jnp.pad(v, ((0, 0), (0, pkv - lkv), (0, pd - d)))
+        o = flash_attention_pallas(q, k, v, params, interpret=interpret)
+        return o[:, :lq, :d].reshape(b, hq, lq, d)
+
+    return f
+
+
+def xla_attention(q, k, v, causal: bool = True):
+    from repro.kernels.flash_attention.ref import attention_ref
+    return jax.jit(attention_ref, static_argnames="causal")(
+        q, k, v, causal=causal)

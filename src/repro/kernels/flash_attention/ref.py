@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for blockwise attention (GQA, optional causal)."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q (B, Hq, Lq, D); k, v (B, Hkv, Lkv, D)."""
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    lkv = k.shape[2]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lkv), bool), k=lkv - lq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd",
+                      p, vv.astype(jnp.float32)).astype(q.dtype)

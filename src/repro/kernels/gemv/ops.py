@@ -1,0 +1,30 @@
+"""Jitted wrapper for the GEMV kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.space import KernelParams
+from repro.kernels.gemv.kernel import gemv_pallas
+
+
+def build(params: KernelParams, interpret: bool = True):
+    n, _k = params.dims
+    pn, pk = params.padded_dims
+    compute_dtype = jnp.dtype(params.dtype)
+
+    @jax.jit
+    def f(x, w):
+        x = jnp.pad(x.astype(compute_dtype), ((0, 0), (0, pk - x.shape[1])))
+        w = jnp.pad(w.astype(compute_dtype),
+                    ((0, pk - w.shape[0]), (0, pn - w.shape[1])))
+        out = gemv_pallas(x, w, params, interpret=interpret)
+        return out[:, :n]
+
+    return f
+
+
+@jax.jit
+def xla_gemv(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the GEMV kernel."""
+
+import jax.numpy as jnp
+
+
+def gemv_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,100 @@
+"""Tiled matmul Pallas kernel — the Algorithm-1 analogue on TPU.
+
+The paper's intrinsic keeps partial results in vector registers, merges them
+with ``vslideup``, and stores each output element exactly once (<1 % store
+instructions). The TPU translation: a f32 accumulator living in VMEM scratch
+across the K-grid, with the HBM store issued only on the last K step
+(``accumulate=True``). The contrasting store-heavy schedule (muRISCV-NN-like,
+and what a naive XLA tiling does when K doesn't fit) makes K the outer grid
+dimension so partial sums round-trip through the output buffer
+(``accumulate=False``); the tuner picks between them per workload×hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.space import KernelParams
+
+
+def _acc_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int,
+                acc_dtype) -> None:
+    """K-inner grid, scratch accumulator, single store (Algorithm 1)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=acc_dtype)
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _noacc_kernel(x_ref, w_ref, o_ref, *, acc_dtype) -> None:
+    """K-outer grid: the output block is revisited ``k_steps`` times with
+    full HBM write-back in between (the store-heavy baseline schedule)."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=acc_dtype).astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array, params: KernelParams,
+                  interpret: bool = True) -> jax.Array:
+    """``x @ w`` with the schedule in ``params``. Shapes already padded to
+    ``params.padded_dims``; returns the padded (pm, pn) product."""
+    pm, pn, pk = params.padded_dims
+    bm, bn, bk = params.block
+    gm, gn, gk = pm // bm, pn // bn, pk // bk
+    int_path = x.dtype in (jnp.int8.dtype, jnp.uint8.dtype)
+    acc_dtype = jnp.int32 if int_path else jnp.float32
+
+    if params.accumulate:
+        if params.order == "nmk":
+            grid = (gn, gm, gk)
+            x_map = lambda j, i, k: (i, k)
+            w_map = lambda j, i, k: (k, j)
+            o_map = lambda j, i, k: (i, j)
+        else:  # "mnk"
+            grid = (gm, gn, gk)
+            x_map = lambda i, j, k: (i, k)
+            w_map = lambda i, j, k: (k, j)
+            o_map = lambda i, j, k: (i, j)
+        kernel = functools.partial(_acc_kernel, k_steps=gk,
+                                   acc_dtype=acc_dtype)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, bk), x_map),
+                      pl.BlockSpec((bk, bn), w_map)],
+            out_specs=pl.BlockSpec((bm, bn), o_map),
+            out_shape=jax.ShapeDtypeStruct((pm, pn), acc_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+            interpret=interpret,
+        )(x, w)
+
+    # store-heavy: K outermost
+    grid = (gk, gm, gn)
+    kernel = functools.partial(_noacc_kernel, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda k, i, j: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda k, i, j: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda k, i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), acc_dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,46 @@
+"""Jitted public wrapper: pad → pallas matmul → slice, per a schedule."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.space import KernelParams
+from repro.kernels.matmul.kernel import matmul_pallas
+
+
+def _pad2(a, rows, cols):
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr or pc:
+        a = jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+def build(params: KernelParams, interpret: bool = True):
+    """Returns jitted ``f(x, w) -> x @ w`` for this schedule."""
+    m, n, _k = params.dims
+    pm, pn, pk = params.padded_dims
+    compute_dtype = jnp.dtype(params.dtype)
+
+    @jax.jit
+    def f(x, w):
+        x = _pad2(x.astype(compute_dtype), pm, pk)
+        w = _pad2(w.astype(compute_dtype), pk, pn)
+        out = matmul_pallas(x, w, params, interpret=interpret)
+        out = out[:m, :n]
+        if params.out_dtype not in ("int32", "float32"):
+            out = out.astype(params.out_dtype)
+        return out
+
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def xla_matmul(x, w, out_dtype=None):
+    """The compiler-baseline path (XLA's own lowering)."""
+    out = jnp.dot(x, w, preferred_element_type=(
+        jnp.int32 if x.dtype in (jnp.int8.dtype, jnp.uint8.dtype)
+        else jnp.float32))
+    return out.astype(out_dtype) if out_dtype else out

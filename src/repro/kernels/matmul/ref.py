@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    if x.dtype in (jnp.int8.dtype, jnp.uint8.dtype):
+        return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)

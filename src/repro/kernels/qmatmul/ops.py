@@ -1,0 +1,36 @@
+"""Jitted wrapper for the quantized matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.space import KernelParams
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+
+DEFAULT_SCALE = 0.01
+
+
+def build(params: KernelParams, interpret: bool = True,
+          scale: float = DEFAULT_SCALE):
+    m, n, _ = params.dims
+    pm, pn, pk = params.padded_dims
+
+    @jax.jit
+    def f(x, w, bias):
+        x = jnp.pad(x, ((0, pm - x.shape[0]), (0, pk - x.shape[1])))
+        w = jnp.pad(w, ((0, pk - w.shape[0]), (0, pn - w.shape[1])))
+        bias = jnp.pad(bias, (0, pn - bias.shape[0]))[None, :]
+        s = jnp.full((1,), scale, jnp.float32)
+        out = qmatmul_pallas(x, w, bias, s, params, interpret=interpret)
+        return out[:m, :n]
+
+    return f
+
+
+@jax.jit
+def xla_qmatmul(x, w, bias, scale=DEFAULT_SCALE):
+    acc = jnp.dot(x, w, preferred_element_type=jnp.int32)
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    return jnp.clip(jnp.round(acc.astype(jnp.float32) * scale),
+                    -128, 127).astype(jnp.int8)

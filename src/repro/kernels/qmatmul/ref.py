@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the quantized matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def qmatmul_ref(x, w, bias, scale=0.01):
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    scaled = acc.astype(jnp.float32) * scale
+    return jnp.clip(jnp.round(scaled), -128, 127).astype(jnp.int8)

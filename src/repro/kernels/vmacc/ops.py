@@ -1,0 +1,30 @@
+"""Jitted wrapper for the vmacc kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.space import KernelParams
+from repro.kernels.vmacc.kernel import vmacc_pallas
+
+
+def build(params: KernelParams, interpret: bool = True):
+    r, c = params.dims
+    pr, pc = params.padded_dims
+    compute_dtype = jnp.dtype(params.dtype)
+
+    @jax.jit
+    def f(a, b, cc):
+        pad = ((0, pr - r), (0, pc - c))
+        a = jnp.pad(a.astype(compute_dtype), pad)
+        b = jnp.pad(b.astype(compute_dtype), pad)
+        cc = jnp.pad(cc.astype(compute_dtype), pad)
+        return vmacc_pallas(a, b, cc, params, interpret=interpret)[:r, :c]
+
+    return f
+
+
+@jax.jit
+def xla_vmacc(a, b, c):
+    return a * b + c

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the vmacc kernel."""
+
+
+def vmacc_ref(a, b, c):
+    return a * b + c

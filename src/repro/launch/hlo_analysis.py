@@ -1,0 +1,286 @@
+"""Static cost analysis over partitioned HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, but every model here iterates layers with ``lax.scan`` — a 40-layer
+scan would be undercounted 40x (verified empirically; see EXPERIMENTS.md
+§Dry-run calibration). This module parses the post-SPMD HLO text, builds the
+computation call graph, infers loop trip counts from the loop-condition
+constants, and accumulates:
+
+- ``flops``      — 2 * prod(out_shape) * prod(contracted dims) per dot op;
+- ``bytes``      — per scheduled op: output bytes + operand bytes (fusion ops
+                   count their real inputs; fusion bodies are not re-counted)
+                   — an XLA-cost-model-style upper bound on HBM traffic;
+- ``collective_bytes`` — per collective: output bytes (x2 for all-reduce,
+                   ring send+recv), per device;
+- per-category op counts (the QEMU instruction-census analogue used by the
+  trace-analysis benchmark).
+
+All quantities are per-device (the input is the partitioned module) and
+multiplied through loop nests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# op-category census (the instruction-trace analogue; benchmark Fig. 5/9)
+_CATEGORY = {
+    "load": ("copy", "dynamic-slice", "gather", "slice"),
+    "store": ("dynamic-update-slice", "scatter"),
+    "compute": ("dot", "convolution", "multiply", "add", "subtract",
+                "divide", "exponential", "fusion", "reduce"),
+    "layout": ("transpose", "reshape", "bitcast", "broadcast", "concatenate",
+               "pad"),
+    "collective": _COLLECTIVES,
+    "control": ("while", "conditional", "call", "parameter", "constant",
+                "tuple", "get-tuple-element", "after-all", "iota",
+                "partition-id", "replica-id"),
+}
+_OP2CAT = {}
+for cat, ops in _CATEGORY.items():
+    for o in ops:
+        _OP2CAT[o] = cat
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "custom-call", "opt-barrier"}
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of every dtype[dims] group in a type string (tuples ok)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    out_shape: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]  # param name -> shape str
+    ops: list[OpInfo]
+
+    def symbol_shapes(self) -> dict[str, str]:
+        table = dict(self.params)
+        for op in self.ops:
+            table[op.name] = op.out_shape
+        return table
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OPCODE_RE = re.compile(r"^\s*(?:\(.*?\)|[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+                        r"([a-z][a-z0-9\-]*)\(")
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                params = {}
+                for pm in re.finditer(r"%?([\w.\-]+):\s*([^,)]+)",
+                                      m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                current = Computation(m.group(1), params, [])
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.match(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        # output type = everything before the opcode token
+        out_shape = rhs[: om.start(1)].strip()
+        current.ops.append(OpInfo(name, opcode, out_shape, rhs))
+    return comps
+
+
+def _callee(line: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def trip_count(while_line: str, cond: Computation | None) -> int:
+    """Loop trip count: prefer XLA's ``known_trip_count`` backend config on
+    the while op; fall back to the max integer constant in the condition
+    (scan conditions compare the induction variable against the length)."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if cond is not None:
+        for op in cond.ops:
+            if op.opcode == "constant":
+                cm = re.search(r"constant\((\d+)\)", op.line)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+    return best
+
+
+def _dot_flops(op: OpInfo, symbols: dict[str, str]) -> float:
+    out_elems = 1
+    for d in shape_dims(op.out_shape):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    operands = re.findall(r"%?([\w.\-]+)", op.line.split("(", 1)[1])
+    lhs_shape = symbols.get(operands[0], "") if operands else ""
+    lhs_dims = shape_dims(lhs_shape)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_bytes_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    op_census: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    n_instructions: float = 0.0
+
+    def to_json(self):
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_counts": dict(self.collective_counts),
+            "collective_bytes_by_op": dict(self.collective_bytes_by_op),
+            "op_census": dict(self.op_census),
+            "n_instructions": self.n_instructions,
+        }
+
+
+def analyze(text: str) -> CostSummary:
+    comps = parse_hlo(text)
+    entry = None
+    for name, c in comps.items():
+        if "main" in name or entry is None:
+            if entry is None or "main" in name:
+                entry = c
+    summary = CostSummary()
+    seen_fusion_bodies = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                callee = _callee(op.line, "calls")
+                if callee:
+                    seen_fusion_bodies.add(callee)
+
+    def visit(comp: Computation, mult: float, stack: tuple) -> None:
+        if comp.name in stack:
+            return
+        symbols = comp.symbol_shapes()
+        for op in comp.ops:
+            opc = op.opcode
+            cat = _OP2CAT.get(opc, "compute")
+            summary.op_census[cat] += mult
+            summary.n_instructions += mult
+            if opc == "dot":
+                summary.flops += mult * _dot_flops(op, symbols)
+            if opc in _COLLECTIVES:
+                b = shape_bytes(op.out_shape)
+                factor = 2.0 if opc == "all-reduce" else 1.0
+                summary.collective_bytes += mult * factor * b
+                summary.collective_counts[opc] += mult
+                summary.collective_bytes_by_op[opc] += mult * factor * b
+            if opc not in _SKIP_BYTES:
+                b = shape_bytes(op.out_shape)
+                operands = re.findall(r"%?([\w.\-]+)",
+                                      op.line.split("(", 1)[1])
+                for o in operands:
+                    if o in symbols:
+                        b += shape_bytes(symbols[o])
+                summary.bytes += mult * b
+            # recurse
+            if opc == "while":
+                body = _callee(op.line, "body")
+                cond = _callee(op.line, "condition")
+                trips = trip_count(op.line, comps.get(cond))
+                if body in comps:
+                    visit(comps[body], mult * trips, stack + (comp.name,))
+                if cond in comps:
+                    visit(comps[cond], mult * trips, stack + (comp.name,))
+            elif opc == "call":
+                callee = _callee(op.line, "to_apply")
+                if callee in comps:
+                    visit(comps[callee], mult, stack + (comp.name,))
+            elif opc == "conditional":
+                for callee in re.findall(
+                        r"(?:branch_computations=\{([^}]*)\}|"
+                        r"(?:true|false)_computation=%?([\w.\-]+))", op.line):
+                    for token in callee:
+                        for name in re.findall(r"%?([\w.\-]+)", token or ""):
+                            if name in comps:
+                                visit(comps[name], mult,
+                                      stack + (comp.name,))
+            elif opc == "fusion":
+                callee = _callee(op.line, "calls")
+                # count dots inside fusion bodies (rare on TPU paths, but
+                # keep flops complete); bytes already counted at fusion level
+                if callee in comps:
+                    fsym = comps[callee].symbol_shapes()
+                    for fop in comps[callee].ops:
+                        if fop.opcode == "dot":
+                            summary.flops += mult * _dot_flops(fop, fsym)
+                        if fop.opcode in _COLLECTIVES:
+                            b = shape_bytes(fop.out_shape)
+                            factor = 2.0 if fop.opcode == "all-reduce" else 1.0
+                            summary.collective_bytes += mult * factor * b
+                            summary.collective_counts[fop.opcode] += mult
+
+    visit(entry, 1.0, ())
+    return summary

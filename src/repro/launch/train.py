@@ -1,0 +1,85 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``.
+
+On this CPU container it runs reduced configs end-to-end (the full configs
+are exercised by the dry-run); on a real TPU slice the same entry point runs
+the full config on the production mesh — the code path is identical, only
+``--mesh host|production`` changes.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import layers as model_layers
+from repro.models.model_zoo import build
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import sharding as sh
+from repro.runtime.supervisor import Supervisor
+from repro.runtime.train_loop import (Trainer, init_train_state,
+                                      jit_train_step, make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite_3_2b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", choices=["host", "production"], default="host")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if args.mesh == "production"
+            else make_host_mesh())
+    bundle = build(cfg, remat=args.remat)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps, weight_decay=0.0)
+    state = init_train_state(bundle, jax.random.key(args.seed), opt_cfg,
+                             compress_grads=args.compress_grads)
+    step = make_train_step(bundle, opt_cfg,
+                           compress_grads=args.compress_grads,
+                           grad_accum=args.grad_accum)
+    with mesh:
+        dp = 1
+        for a in sh.batch_axes(mesh):
+            dp *= mesh.shape[a]
+        model_layers.set_activation_sharding(sh.batch_axes(mesh), dp,
+                                             "model", mesh.shape["model"])
+        jitted, state_sh, _ = jit_train_step(step, state, mesh,
+                                             {"tokens": 2})
+        data = SyntheticLM(cfg.vocab_size, args.seq_len, args.batch,
+                           seed=args.seed)
+        ckpt = (CheckpointManager(args.checkpoint_dir)
+                if args.checkpoint_dir else None)
+        trainer = Trainer(bundle, opt_cfg, data, state, jitted, ckpt,
+                          checkpoint_every=args.checkpoint_every)
+        sup = Supervisor(trainer)
+        report = sup.run(args.steps)
+        for rec in trainer.records[:: max(args.steps // 20, 1)]:
+            print(f"step {rec.step:5d} loss {rec.loss:8.4f} "
+                  f"({rec.wall_s * 1e3:.0f} ms)")
+        print(f"final loss {report.losses[-1]:.4f} "
+              f"(restarts={report.restarts}, "
+              f"stragglers={len(report.stragglers)})")
+    model_layers.clear_activation_sharding()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (Whisper-tiny backbone).
+
+The conv audio frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, encoder_seq, D) from ``input_specs``.
+Learned positional embeddings (no RoPE), LayerNorm with bias, GeLU MLPs —
+the Whisper conventions. Decoder layers carry self-attention (causal, KV
+cached at decode) and cross-attention against the encoded frames.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _init_ln(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _init_enc_layer(key, cfg: ArchConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": _init_ln(cfg.d_model),
+        "attn": L.init_attention(ka, cfg),
+        "ln2": _init_ln(cfg.d_model),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model),
+        "self_attn": L.init_attention(ka, cfg),
+        "ln2": _init_ln(cfg.d_model),
+        "cross_attn": L.init_attention(kc, cfg),
+        "ln3": _init_ln(cfg.d_model),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kp, kd, kq, kt = jax.random.split(key, 5)
+    return {
+        **L.init_embedding(ke, cfg),
+        "enc_pos": jax.random.normal(kp, (cfg.encoder_seq, cfg.d_model),
+                                     jnp.float32) * 0.02,
+        "dec_pos": jax.random.normal(kq, (cfg.max_decoder_pos(), cfg.d_model),
+                                     jnp.float32) * 0.02,
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+            jax.random.split(kd, cfg.n_encoder_layers)),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+            jax.random.split(kt, cfg.n_layers)),
+        "enc_norm": _init_ln(cfg.d_model),
+        "final_norm": _init_ln(cfg.d_model),
+    }
+
+
+def _no_rope_sdpa(x, p, cfg, kv=None, causal=False):
+    """Attention without RoPE. kv: (keys_src) for cross-attention."""
+    src = kv if kv is not None else x
+    b, s, _ = x.shape
+    t = src.shape[1]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (src @ p["wk"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads,
+                                                cfg.head_dim)
+    v = (src @ p["wv"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads,
+                                                cfg.head_dim)
+    out = L._sdpa(q, k, v, rows=jnp.arange(s, dtype=jnp.int32),
+                  cols=jnp.arange(t, dtype=jnp.int32), window=-1,
+                  causal=causal)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames (B, T_enc, D) precomputed stub embeddings -> (B, T_enc, D)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype) + params["enc_pos"][None].astype(dtype)
+
+    def body(carry, lp):
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        out, _ = _no_rope_sdpa(h, lp["attn"], cfg)  # bidirectional
+        x2 = carry + out
+        h = _ln(x2, lp["ln2"], cfg.norm_eps)
+        return x2 + L.mlp(h, lp["mlp"], "gelu"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, frames, tokens, cfg: ArchConfig, *, remat: str = "full"):
+    """Teacher-forced decode over encoded frames -> logits (B, S, V)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc = encode(params, frames, cfg)
+    b, s = tokens.shape
+    x = L.embed(tokens, params, cfg, dtype)
+    x = x + params["dec_pos"][:s][None].astype(dtype)
+
+    def body(carry, lp):
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        out, _ = _no_rope_sdpa(h, lp["self_attn"], cfg, causal=True)
+        x2 = carry + out
+        h = _ln(x2, lp["ln2"], cfg.norm_eps)
+        out, _ = _no_rope_sdpa(h, lp["cross_attn"], cfg, kv=enc)
+        x2 = x2 + out
+        h = _ln(x2, lp["ln3"], cfg.norm_eps)
+        return L.shard_act(x2 + L.mlp(h, lp["mlp"], "gelu"), seq_model=True), None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg)
+
+
+# -------------------------------------------------------------------- decode --
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    cross = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "ck": jnp.zeros(cross, dtype), "cv": jnp.zeros(cross, dtype)}
+
+
+def prefill(params, frames, tokens, cfg: ArchConfig, max_len: int):
+    """Encode + teacher-forced pass capturing self/cross KV caches."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc = encode(params, frames, cfg)
+    b, s = tokens.shape
+    x = L.embed(tokens, params, cfg, dtype)
+    x = x + params["dec_pos"][:s][None].astype(dtype)
+
+    def body(carry, lp):
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        out, (kk, vv) = _no_rope_sdpa(h, lp["self_attn"], cfg, causal=True)
+        x2 = carry + out
+        h = _ln(x2, lp["ln2"], cfg.norm_eps)
+        out, (ck, cv) = _no_rope_sdpa(h, lp["cross_attn"], cfg, kv=enc)
+        x2 = x2 + out
+        h = _ln(x2, lp["ln3"], cfg.norm_eps)
+        pad = max_len - s
+        kk = jnp.pad(kk.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(vv.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x2 + L.mlp(h, lp["mlp"], "gelu"), (kk, vv, ck.astype(dtype),
+                                                  cv.astype(dtype))
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    cache = {"k": ks, "v": vs, "ck": cks, "cv": cvs}
+    return L.unembed(x, params, cfg), cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """One decoder token against cached self/cross KV."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    x = L.embed(tokens, params, cfg, dtype)
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)
+    x = x + pos_emb[None].astype(dtype)
+
+    def body(carry, per_layer):
+        lp, k_c, v_c, ck, cv = per_layer
+        h = _ln(carry, lp["ln1"], cfg.norm_eps)
+        q = (h @ lp["self_attn"]["wq"].astype(dtype)).reshape(
+            b, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["self_attn"]["wk"].astype(dtype)).reshape(
+            b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["self_attn"]["wv"].astype(dtype)).reshape(
+            b, 1, cfg.n_kv_heads, cfg.head_dim)
+        k_c = jax.lax.dynamic_update_slice(k_c, k, (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v, (0, pos, 0, 0))
+        out = L._sdpa(q, k_c, v_c, rows=jnp.full((1,), pos, jnp.int32),
+                      cols=jnp.arange(k_c.shape[1], dtype=jnp.int32),
+                      window=-1, causal=True)
+        x2 = carry + out @ lp["self_attn"]["wo"].astype(dtype)
+        h = _ln(x2, lp["ln2"], cfg.norm_eps)
+        q = (h @ lp["cross_attn"]["wq"].astype(dtype)).reshape(
+            b, 1, cfg.n_heads, cfg.head_dim)
+        out = L._sdpa(q, ck, cv, rows=jnp.zeros((1,), jnp.int32),
+                      cols=jnp.arange(ck.shape[1], dtype=jnp.int32),
+                      window=-1, causal=False)
+        x2 = x2 + out @ lp["cross_attn"]["wo"].astype(dtype)
+        h = _ln(x2, lp["ln3"], cfg.norm_eps)
+        return x2 + L.mlp(h, lp["mlp"], "gelu"), (k_c, v_c)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = _ln(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg)[:, 0], dict(cache, k=nk, v=nv)

@@ -1,0 +1,267 @@
+"""Mixture-of-Experts transformer (Qwen2-MoE / Moonshot family).
+
+Routing uses top-k softmax with capacity-bounded sort-free dispatch
+(scatter into per-expert slot buffers), which keeps dispatch memory at
+O(tokens·top_k) instead of the O(tokens·experts·capacity) einsum form —
+the at-scale layout (Megablocks-style) that also shards cleanly: the expert
+dimension of the (E, cap, D) buffers maps onto the ``model`` mesh axis (EP).
+Experts are padded up to a multiple of the EP axis when needed (60 -> 64
+for qwen2-moe, per DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def padded_experts(cfg: ArchConfig, ep: int = 16) -> int:
+    e = cfg.n_experts
+    return ((e + ep - 1) // ep) * ep if e % ep else e
+
+
+def _init_layer(key, cfg: ArchConfig):
+    ka, kr, ke, ks = jax.random.split(key, 4)
+    d, fe = cfg.d_model, cfg.moe_d_ff
+    e = padded_experts(cfg)
+    scale = 1.0 / math.sqrt(d)
+
+    def expert_mats(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "w_gate": jax.random.normal(k1, (e, d, fe), jnp.float32) * scale,
+            "w_up": jax.random.normal(k2, (e, d, fe), jnp.float32) * scale,
+            "w_down": jax.random.normal(k3, (e, fe, d), jnp.float32)
+                      * (1.0 / math.sqrt(fe)),
+        }
+
+    p = {
+        "ln1": L.init_norm(d),
+        "attn": L.init_attention(ka, cfg),
+        "ln2": L.init_norm(d),
+        "router": jax.random.normal(kr, (d, e), jnp.float32) * scale,
+        "experts": expert_mats(ke),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks, d, cfg.n_shared_experts * cfg.moe_d_ff,
+                                 "silu")
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        **L.init_embedding(ke, cfg),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": L.init_norm(cfg.d_model),
+    }
+
+
+# Scatter dispatch / gather combine as a custom_vjp pair. Reason: XLA's
+# *transpose* of a batched scatter materializes element-wise u32 index masks
+# (TB-scale at train_4k) and drops the batch sharding. Writing the backward
+# passes explicitly — the bwd of dispatch is a gather at the same slots, the
+# bwd of combine is a scatter-add — keeps both directions as ordinary
+# primals with pinned shardings.
+
+import functools
+
+
+def _batched_scatter(slot, vals, n_slots, add=False):
+    """vmapped 1-D scatter -> HLO scatter with operand batching dims, which
+    GSPMD partitions along B (plain advanced indexing does not)."""
+    d = vals.shape[-1]
+
+    def one(idx_row, val_row):
+        buf = jnp.zeros((n_slots + 1, d), val_row.dtype)
+        if add:
+            return buf.at[idx_row].add(val_row)
+        return buf.at[idx_row].set(val_row)
+
+    return jax.vmap(one)(slot, vals)[:, :n_slots]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _dispatch(x_rep, slot, n_slots):
+    """(B, Sk, D) tokens -> (B, n_slots, D) expert slot buffer."""
+    return L.shard_act(_batched_scatter(slot, x_rep, n_slots))
+
+
+def _dispatch_fwd(x_rep, slot, n_slots):
+    return _dispatch(x_rep, slot, n_slots), slot
+
+
+def _dispatch_bwd(n_slots, slot, g):
+    keep = (slot < n_slots)[..., None]
+    idx = jnp.minimum(slot, n_slots - 1)[..., None]
+    d_x = jnp.take_along_axis(g, idx, axis=1)
+    return L.shard_act(jnp.where(keep, d_x, 0)), None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _combine(out_flat, slot, n_slots):
+    """(B, n_slots, D) expert outputs -> (B, Sk, D) per-token outputs."""
+    keep = (slot < n_slots)[..., None]
+    idx = jnp.minimum(slot, n_slots - 1)[..., None]
+    g = jnp.take_along_axis(out_flat, idx, axis=1)
+    return L.shard_act(jnp.where(keep, g, 0))
+
+
+def _combine_fwd(out_flat, slot, n_slots):
+    return _combine(out_flat, slot, n_slots), slot
+
+
+def _combine_bwd(n_slots, slot, g):
+    keep = (slot < n_slots)[..., None]
+    buf = _batched_scatter(slot, jnp.where(keep, g, 0), n_slots, add=True)
+    return L.shard_act(buf), None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_ffn(x, lp, cfg: ArchConfig):
+    """x (B, S, D) -> (B, S, D): top-k routed experts + shared experts.
+
+    Dispatch is *grouped by batch row* (GShard-style groups = data shards):
+    the capacity cumsum runs along S within each row, vectorized over the
+    batch-sharded B dim — no cross-device token reordering, so dispatch
+    buffers stay sharded (B over data, E over model/EP) and the only MoE
+    collective is the expert einsum's reduce, inserted by GSPMD."""
+    b, s, d = x.shape
+    e = padded_experts(cfg)
+    k = cfg.top_k
+
+    logits = (x @ lp["router"].astype(x.dtype)).astype(jnp.float32)
+    if e != cfg.n_experts:  # padding experts are never routed to
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    gate_vals, sel = jax.lax.top_k(logits, k)          # (B, S, k)
+    gates = jax.nn.softmax(gate_vals, axis=-1).astype(x.dtype)
+
+    cap = max(8, int(math.ceil(s * k / e * cfg.capacity_factor)))
+    flat_sel = sel.reshape(b, s * k)                   # (B, S*k)
+    # Sort-based position-in-expert (Megablocks-style): avoids the
+    # (B, S*k, E) one-hot cumsum, which at train_4k scale is a TB-class
+    # tensor. argsort is stable, so earlier tokens keep capacity priority —
+    # identical keep-policy to the cumsum formulation.
+    order = jnp.argsort(flat_sel, axis=1)              # (B, S*k)
+    sorted_e = jnp.take_along_axis(flat_sel, order, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)  # (B, E)
+    pos_sorted = (jnp.arange(s * k)[None]
+                  - jnp.take_along_axis(starts, sorted_e, axis=1))
+    pos = jnp.zeros((b, s * k), jnp.int32).at[
+        jnp.arange(b)[:, None], order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < cap
+    slot = jnp.where(keep, flat_sel * cap + pos, e * cap)   # (B, S*k)
+
+    x_rep = L.shard_act(jnp.repeat(x, k, axis=1))      # (B, S*k, D)
+    buf = _dispatch(x_rep, slot, e * cap)
+    expert_in = L.shard_expert(buf.reshape(b, e, cap, d))
+
+    we = lp["experts"]
+    gate_h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in,
+                                    we["w_gate"].astype(x.dtype)))
+    up_h = jnp.einsum("becd,edf->becf", expert_in,
+                      we["w_up"].astype(x.dtype))
+    out = jnp.einsum("becf,efd->becd", L.shard_expert(gate_h * up_h),
+                     we["w_down"].astype(x.dtype))
+
+    out_flat = L.shard_expert(out).reshape(b, e * cap, d)
+    gathered = _combine(out_flat, slot, e * cap)
+    y = (gathered.reshape(b, s, k, d) * gates[..., None]).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + L.mlp(x, lp["shared"], "silu")
+    return y
+
+
+def _block(x, lp, window, cfg: ArchConfig, positions):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn_out, _ = L.attention(h, lp["attn"], cfg, positions, window)
+    x = x + attn_out
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return L.shard_act(x + moe_ffn(h, lp, cfg), seq_model=True)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, remat: str = "full"):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params, cfg, dtype)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, per_layer):
+        lp, window = per_layer
+        return _block(carry, lp, window, cfg, positions), None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, (params["layers"], T.window_array(cfg)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg)
+
+
+init_cache = T.init_cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params, cfg, dtype)
+
+    def body(carry, per_layer):
+        x_c, k_all, v_all = carry  # cache carried in place (see transformer)
+        lp, window, li = per_layer
+        k_c = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
+        v_c = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
+        h = L.rms_norm(x_c, lp["ln1"], cfg.norm_eps)
+        attn_out, k_c, v_c = L.attention_decode(h, lp["attn"], cfg, k_c, v_c,
+                                                pos, window)
+        x2 = x_c + attn_out
+        h = L.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, k_c, li, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, v_c, li, 0)
+        return (x2 + moe_ffn(h, lp, cfg), k_all, v_all), None
+
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (x, nk, nv), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], T.window_array(cfg), layer_ids))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg)[:, 0], {"k": nk, "v": nv}
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params, cfg, dtype)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, per_layer):
+        lp, window = per_layer
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        attn_out, (kk, vv) = L.attention(h, lp["attn"], cfg, positions,
+                                         window)
+        x2 = carry + attn_out
+        h = L.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+        out = x2 + moe_ffn(h, lp, cfg)
+        pad = max_len - s
+        kk = jnp.pad(kk.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(vv.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return out, (kk, vv)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], T.window_array(cfg)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg), {"k": ks, "v": vs}

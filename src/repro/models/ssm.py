@@ -1,0 +1,260 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+The chunked SSD form computes the selective-SSM as block matmuls: an
+intra-chunk quadratic part plus an inter-chunk state recurrence — i.e. it
+bottoms out in exactly the tensor contractions the paper's tuned intrinsics
+accelerate (DESIGN.md §4: attention-free arch, matmul path fully applicable).
+Decode is an O(1) state update per token.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+C_GATE = 8.0  # unused here; see griffin
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_state
+
+
+def _init_layer(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, h, n = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "ln": L.init_norm(d),
+        # in_proj -> [z (d_in), x (d_in), B (n), C (n), dt (h)]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * d_in + 2 * n + h), jnp.float32) * scale,
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": L.init_norm(d_in),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), jnp.float32)
+                    * (1.0 / math.sqrt(d_in)),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        **L.init_embedding(ke, cfg),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_norm": L.init_norm(cfg.d_model),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B, S, C); w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(xdt, da, b_mat, c_mat, chunk: int, init_state=None):
+    """Chunk-parallel SSD (Mamba-2, alg. from arXiv:2405.21060 §6).
+
+    xdt (B,S,H,P) — inputs pre-multiplied by dt; da (B,S,H) = dt*A (<=0);
+    b_mat/c_mat (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = xdt.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // q
+    xc = xdt.reshape(bsz, nc, q, h, p)
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+    dac = da.reshape(bsz, nc, q, h).transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    cs = jnp.cumsum(dac.astype(jnp.float32), axis=-1)
+
+    # intra-chunk (quadratic within chunk)
+    seg = cs[..., :, None] - cs[..., None, :]              # (B,nc,H,Q,Q)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.exp(jnp.where(tril, seg, -jnp.inf)).astype(xdt.dtype)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, lmat, xc)
+
+    # inter-chunk state passing
+    decay_to_end = jnp.exp(cs[..., -1:] - cs).astype(xdt.dtype)  # (B,nc,H,Q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(cs[..., -1]).astype(xdt.dtype)         # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp
+        return s_prev * dec[..., None, None] + st, s_prev
+
+    init = (init_state if init_state is not None
+            else jnp.zeros((bsz, h, p, n), xdt.dtype))
+    final, s_prevs = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, s_prevs,
+                       jnp.exp(cs).astype(xdt.dtype))
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)
+    return y[:, :l], final
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    d_in, h, n = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xs = zxbcdt[..., d_in:2 * d_in]
+    b_mat = zxbcdt[..., 2 * d_in:2 * d_in + n]
+    c_mat = zxbcdt[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xs, b_mat, c_mat, dt
+
+
+def ssm_block(x, lp, cfg: ArchConfig):
+    """One Mamba-2 block over a full sequence. x (B,S,D)."""
+    d_in, h, n = _dims(cfg)
+    zxbcdt = x @ lp["in_proj"].astype(x.dtype)
+    z, xs, b_mat, c_mat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv_out = jax.nn.silu(causal_conv(conv_in, lp["conv_w"], lp["conv_b"]))
+    xs = conv_out[..., :d_in]
+    b_mat = conv_out[..., d_in:d_in + n]
+    c_mat = conv_out[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + lp["dt_bias"]).astype(x.dtype)   # (B,S,H)
+    a = -jnp.exp(lp["a_log"]).astype(jnp.float32)           # (H,)
+    da = dt.astype(jnp.float32) * a                         # (B,S,H)
+    xh = xs.reshape(*xs.shape[:-1], h, cfg.ssm_head_dim)
+    xdt = xh * dt[..., None]
+    y, _ = ssd_chunked(xdt, da, b_mat, c_mat, cfg.ssm_chunk)
+    y = y + xh * lp["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(*x.shape[:-1], d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"].astype(x.dtype)
+
+
+def forward(params, tokens, cfg: ArchConfig, *, remat: str = "full"):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params, cfg, dtype)
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        return L.shard_act(carry + ssm_block(h, lp, cfg), seq_model=True), None
+
+    if remat == "full":
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg)
+
+
+# -------------------------------------------------------------------- decode --
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    del max_len  # O(1) state — the SSM long-context advantage
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_in, h, n = _dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1,
+                           conv_dim), dtype),
+        "state": jnp.zeros((cfg.n_layers, batch, h, cfg.ssm_head_dim, n),
+                           dtype),
+    }
+
+
+def _ssm_block_decode(x, lp, cfg: ArchConfig, conv_c, state):
+    """x (B, D) single token. Returns (out, conv_c, state)."""
+    d_in, h, n = _dims(cfg)
+    zxbcdt = x @ lp["in_proj"].astype(x.dtype)
+    z, xs, b_mat, c_mat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([conv_c, conv_in[:, None]], axis=1)  # (B,K,C)
+    w = lp["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu((window * w[None]).sum(axis=1)
+                           + lp["conv_b"].astype(x.dtype))
+    conv_c = window[:, 1:]
+    xs = conv_out[..., :d_in]
+    b_mat = conv_out[..., d_in:d_in + n]
+    c_mat = conv_out[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,H)
+    a = -jnp.exp(lp["a_log"]).astype(jnp.float32)
+    da = jnp.exp(dt * a).astype(x.dtype)                          # (B,H)
+    xh = xs.reshape(-1, h, cfg.ssm_head_dim)
+    xdt = xh * dt.astype(x.dtype)[..., None]
+    state = (state * da[..., None, None]
+             + jnp.einsum("bn,bhp->bhpn", b_mat, xdt))
+    y = jnp.einsum("bn,bhpn->bhp", c_mat, state)
+    y = y + xh * lp["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(-1, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"].astype(x.dtype), conv_c, state
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    del pos  # state carries all history
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params, cfg, dtype)[:, 0]  # (B, D)
+
+    def body(carry, per_layer):
+        lp, conv_c, state = per_layer
+        h = L.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        out, conv_c, state = _ssm_block_decode(h, lp, cfg, conv_c, state)
+        return carry + out, (conv_c, state)
+
+    x, (conv, state) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg), {"conv": conv, "state": state}
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int):
+    """Forward + final state capture for serving."""
+    del max_len
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(tokens, params, cfg, dtype)
+    d_in, h, n = _dims(cfg)
+
+    def body(carry, lp):
+        hx = L.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        zxbcdt = hx @ lp["in_proj"].astype(hx.dtype)
+        z, xs, b_mat, c_mat, dt = _split_proj(zxbcdt, cfg)
+        conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+        conv_out = jax.nn.silu(causal_conv(conv_in, lp["conv_w"],
+                                           lp["conv_b"]))
+        conv_tail = conv_in[:, -(cfg.conv_kernel - 1):]
+        xs2 = conv_out[..., :d_in]
+        b2 = conv_out[..., d_in:d_in + n]
+        c2 = conv_out[..., d_in + n:]
+        dt2 = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        a = -jnp.exp(lp["a_log"]).astype(jnp.float32)
+        da = dt2 * a
+        xh = xs2.reshape(*xs2.shape[:-1], h, cfg.ssm_head_dim)
+        xdt = xh * dt2.astype(hx.dtype)[..., None]
+        y, final = ssd_chunked(xdt, da, b2, c2, cfg.ssm_chunk)
+        y = y + xh * lp["d_skip"].astype(hx.dtype)[:, None]
+        y = y.reshape(*hx.shape[:-1], d_in)
+        y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+        return carry + y @ lp["out_proj"].astype(hx.dtype), (conv_tail, final)
+
+    x, (conv, state) = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params, cfg), {"conv": conv, "state": state}

@@ -1,0 +1,68 @@
+"""Gradient compression with error feedback — cross-pod bandwidth trick.
+
+At multi-pod scale the dominant collective is the cross-pod gradient
+all-reduce over the (comparatively slow) inter-pod links. Quantizing
+gradients to int8 with per-tensor scales halves that traffic vs bf16 (4x vs
+f32); the error-feedback accumulator re-injects the quantization residual
+into the next step, which keeps SGD/Adam convergence (Seide et al.; Karimireddy
+et al.). Two entry points:
+
+- ``compress_tree`` / error-feedback state: a pure transformation on the
+  gradient pytree inside ``train_step`` (works under pjit — XLA sees int8
+  tensors crossing the ``pod`` axis reduction);
+- ``compressed_psum``: an explicit shard_map collective for the cross-pod
+  reduce (int8 payload summed in int32), used by the multi-pod dry-run
+  variant to prove lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, ef_state):
+    """Quantize grads to int8 (simulating the wire format) and carry the
+    residual. Returns (dequantized_grads, new_ef_state)."""
+    def leaf(g, ef):
+        g32 = g.astype(jnp.float32) + ef
+        q, s = quantize_int8(g32)
+        g_hat = dequantize_int8(q, s)
+        return g_hat.astype(g.dtype), (g32 - g_hat)
+
+    flat = jax.tree.map(leaf, grads, ef_state)
+    g_hat = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return g_hat, new_ef
+
+
+def init_error_feedback(params):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-payload all-reduce: quantize locally, sum int32 across the axis,
+    dequantize with the max scale. For use inside ``shard_map``."""
+    q, scale = quantize_int8(x)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # re-quantize against the shared scale so the sum is coherent
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale_max), -127, 127)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    return (total.astype(jnp.float32) * scale_max
+            / n.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,150 @@
+"""Per-kernel correctness: shape/dtype sweeps + hypothesis properties, all
+validated in interpret mode against the pure-jnp oracles in ref.py."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels
+from repro.core import INTERPRET, TraceSampler, concretize, space_for
+from repro.core import workload as W
+
+HW = INTERPRET
+
+
+def _run(wl, seed=0):
+    space = space_for(wl, HW)
+    s = TraceSampler(seed).sample(space)
+    p = concretize(wl, HW, s)
+    if not p.valid:
+        pytest.skip("sampled schedule invalid for this workload")
+    fn = kernels.build(wl, p, interpret=True)
+    ref = kernels.reference(wl)
+    inputs = wl.example_inputs(seed)
+    got = np.asarray(fn(*inputs)).astype(np.float64)
+    want = np.asarray(ref(*inputs)).astype(np.float64)
+    return got, want
+
+
+# ---------------------------------------------------------------- matmul ----
+
+@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (16, 128, 64), (100, 60, 36),
+                                   (1, 256, 256), (128, 128, 384)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matmul_sweep(m, n, k, dtype):
+    got, want = _run(W.matmul(m, n, k, dtype))
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * 10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 96), n=st.integers(1, 96), k=st.integers(1, 96),
+       seed=st.integers(0, 3))
+def test_matmul_property(m, n, k, seed):
+    got, want = _run(W.matmul(m, n, k, "float32"), seed)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_store_heavy_schedule_matches():
+    """accumulate=False (k-outer, partials via HBM) must stay correct."""
+    wl = W.matmul(64, 96, 160, "float32")
+    space = space_for(wl, HW)
+    s = TraceSampler(0).sample(space).replace("accumulate", False)
+    p = concretize(wl, HW, s)
+    fn = kernels.build(wl, p, interpret=True)
+    x, w = wl.example_inputs()
+    np.testing.assert_allclose(np.asarray(fn(x, w)), x @ w, rtol=1e-4,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------- qmatmul ---
+
+@pytest.mark.parametrize("m,n,k", [(16, 16, 32), (64, 48, 100), (33, 65, 17)])
+def test_qmatmul_exact(m, n, k):
+    wl = W.qmatmul(m, n, k)
+    got, want = _run(wl)
+    np.testing.assert_array_equal(got, want)  # int8 requant path is exact
+
+
+# ------------------------------------------------------------------ gemv ----
+
+@pytest.mark.parametrize("n,k", [(8, 8), (128, 512), (100, 300), (1, 64)])
+def test_gemv_sweep(n, k):
+    got, want = _run(W.gemv(n, k))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_gemv_j1_variant():
+    """The paper's J=1 fallback intrinsic must be registered and correct."""
+    from repro.core import intrinsics
+    wl = W.gemv(96, 256)
+    names = [v.name for v in intrinsics.variants_for(wl, HW)]
+    assert "j1" in names
+    space = space_for(wl, HW)
+    s = TraceSampler(0).sample(space).replace("variant", "j1")
+    p = concretize(wl, HW, s)
+    fn = kernels.build(wl, p, interpret=True)
+    x, w = wl.example_inputs()
+    np.testing.assert_allclose(np.asarray(fn(x, w)),
+                               np.asarray(x, np.float32) @ w, rtol=1e-4,
+                               atol=1e-3)
+
+
+# ----------------------------------------------------------------- vmacc ----
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.integers(1, 70), c=st.integers(1, 200), seed=st.integers(0, 3))
+def test_vmacc_property(r, c, seed):
+    got, want = _run(W.vmacc(r, c), seed)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- attention ----
+
+@pytest.mark.parametrize("b,hq,hkv,ql,kl,d", [
+    (1, 2, 2, 32, 32, 16),     # MHA
+    (2, 4, 2, 64, 64, 32),     # GQA group 2
+    (1, 8, 1, 48, 48, 64),     # MQA, ragged seq
+    (1, 2, 1, 17, 33, 8),      # non-aligned, cross lengths
+])
+def test_attention_causal_sweep(b, hq, hkv, ql, kl, d):
+    wl = W.attention(b, hq, hkv, ql, kl, d, causal=True)
+    got, want = _run(wl)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_non_causal():
+    wl = W.attention(2, 2, 2, 24, 40, 16, causal=False)
+    got, want = _run(wl)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_all_variants_agree():
+    """Every registered (block_q, block_kv) granularity computes the same
+    attention — the multi-VL registration is semantics-preserving."""
+    wl = W.attention(1, 2, 1, 40, 40, 16, causal=True)
+    space = space_for(wl, HW)
+    ref = kernels.reference(wl)
+    inputs = wl.example_inputs()
+    want = np.asarray(ref(*inputs))
+    for name in space["variant"]:
+        from repro.core.schedule import Schedule
+        p = concretize(wl, HW, Schedule.fixed(variant=name))
+        fn = kernels.build(wl, p, interpret=True)
+        np.testing.assert_allclose(np.asarray(fn(*inputs)), want, rtol=2e-3,
+                                   atol=2e-3, err_msg=name)
+
+
+# ----------------------------------------------------- xla baseline parity --
+
+@pytest.mark.parametrize("op", ["matmul", "gemv", "vmacc"])
+def test_xla_baseline_matches_reference(op):
+    wl = {"matmul": W.matmul(32, 48, 64),
+          "gemv": W.gemv(48, 96),
+          "vmacc": W.vmacc(24, 36)}[op]
+    fn = kernels.xla_baseline(wl)
+    ref = kernels.reference(wl)
+    inputs = wl.example_inputs()
+    np.testing.assert_allclose(np.asarray(fn(*inputs)),
+                               np.asarray(ref(*inputs)), rtol=1e-5,
+                               atol=1e-5)
