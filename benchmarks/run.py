@@ -18,15 +18,21 @@ host; ``analytic`` = the v5e latency model used for TPU-target numbers.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
 
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
 from benchmarks import nets
 from repro.core import (AnalyticRunner, InterpretRunner, TuningDatabase,
-                        V5E, V5E_MXU256, V5E_VMEM32, V5E_VMEM64, INTERPRET,
-                        concretize, fixed_library_schedule, space_for, tune,
-                        xla_latency)
+                        TuningSession, V5E, V5E_MXU256, V5E_VMEM32,
+                        V5E_VMEM64, INTERPRET, concretize,
+                        fixed_library_schedule, space_for, tune, xla_latency)
 from repro.core.space import instruction_census
 from repro.core import workload as W
 
@@ -144,47 +150,41 @@ def trace_analysis(trials: int = 32) -> None:
 # -------------------------------------------------------------- Fig. 7/10 ----
 
 def networks(trials: int = 16, measured: bool = True) -> None:
-    """Complete networks: sum of per-operator latencies under tuned /
-    fixed-library / XLA mappings. v5e-analytic for all nets; wall-clock
-    interpret for the small ones (bert-tiny, anomaly-detection)."""
+    """Complete networks through TuningSession: each net's unique workloads
+    tune once under a shared budget (dedup + database warm-start across nets
+    — later nets reuse earlier nets' records for shared shapes), summed with
+    repeat counts under tuned / fixed-library / XLA mappings. v5e-analytic
+    for all nets; wall-clock interpret for the small ones."""
     db = TuningDatabase()
     improvements_fixed, improvements_xla = [], []
     for net_name, builder in nets.NETWORKS.items():
         ops = builder()
-        t_tuned = t_fixed = 0.0
-        runner = AnalyticRunner(V5E)
-        for count, wl in ops:
-            res = tune(wl, V5E, runner, trials=trials, seed=0, database=db)
-            fx = runner.run(wl, fixed_library_schedule(wl, V5E))
-            if not np.isfinite(fx):
-                fx = res.best_latency
-            t_tuned += count * res.best_latency
-            t_fixed += count * fx
+        session = TuningSession(V5E, AnalyticRunner(V5E), database=db)
+        res = session.tune_model(ops, total_trials=trials * len(ops), seed=0)
+        t_tuned, t_fixed = res.tuned_latency, res.fixed_latency
         emit(f"net_v5e/{net_name}/tuned", t_tuned * 1e6,
-             f"vs_fixed={t_fixed / t_tuned:.2f}x")
+             f"vs_fixed={t_fixed / t_tuned:.2f}x "
+             f"unique={len(res.reports)}/{len(ops)}")
         emit(f"net_v5e/{net_name}/fixed", t_fixed * 1e6, "")
         improvements_fixed.append(1 - t_tuned / t_fixed)
     emit("net_v5e/mean_improvement_vs_fixed", 0.0,
          f"{np.mean(improvements_fixed) * 100:.0f}%")
 
     if measured:
-        # wall-clock on this host. tuned-vs-fixed compares two Pallas
-        # schedules on the SAME (interpret) runtime — the like-for-like
-        # comparison; the XLA row is the compiled-runtime reference (its
-        # absolute time is not comparable to interpret-mode numbers).
+        # wall-clock on this host with batched (thread-pool) candidate
+        # builds. tuned-vs-fixed compares two Pallas schedules on the SAME
+        # (interpret) runtime — the like-for-like comparison; the XLA row is
+        # the compiled-runtime reference (its absolute time is not
+        # comparable to interpret-mode numbers).
         for net_name in ("bert-tiny", "anomaly-detection"):
             ops = nets.NETWORKS[net_name]()
             runner = InterpretRunner(INTERPRET, repeats=2)
-            t_tuned = t_fixed = t_xla = 0.0
-            for count, wl in ops:
-                res = tune(wl, INTERPRET, runner, trials=max(8, trials // 2),
-                           seed=0)
-                fx = runner.run(wl, fixed_library_schedule(wl, INTERPRET))
-                if not np.isfinite(fx):
-                    fx = res.best_latency
-                t_tuned += count * res.best_latency
-                t_fixed += count * fx
-                t_xla += count * xla_latency(wl, repeats=2)
+            session = TuningSession(INTERPRET, runner, database=db)
+            res = session.tune_model(
+                ops, total_trials=max(8, trials // 2) * len(ops), seed=0)
+            t_tuned, t_fixed = res.tuned_latency, res.fixed_latency
+            t_xla = sum(r.count * xla_latency(r.workload, repeats=2)
+                        for r in res.reports)
             emit(f"net_interp/{net_name}/tuned", t_tuned * 1e6,
                  f"vs_fixed={t_fixed / t_tuned:.2f}x")
             emit(f"net_interp/{net_name}/fixed", t_fixed * 1e6, "")

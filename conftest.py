@@ -1,0 +1,36 @@
+"""Repo-level pytest wiring.
+
+- Puts ``src/`` on ``sys.path`` so ``import repro`` works without a manual
+  ``PYTHONPATH`` (the repo root itself is already there, for ``benchmarks``).
+- Registers the ``slow`` marker and skips slow tests by default; run them
+  with ``--runslow`` (the tier-1 default run must stay well under a minute).
+"""
+
+import os
+import sys
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked @pytest.mark.slow")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tuner/model tests, skipped unless --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

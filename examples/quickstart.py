@@ -7,10 +7,15 @@ The paper's workflow in miniature:
   4. persist the best schedule to the tuning database (the deployable
      artifact — later runs dispatch through it with no search).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py
 """
 
+import os
+import sys
+
 import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (InterpretRunner, TuningDatabase, INTERPRET,
                         fixed_library_schedule, tune, xla_latency)

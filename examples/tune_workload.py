@@ -1,39 +1,41 @@
 """The paper's end-to-end deployment flow on a complete network:
-extract per-operator workloads from BERT-tiny (the paper's NLP benchmark),
-tune each on the v5e latency model, and report the network-level latency
-against the hand-written library mapping — Figure 7's experiment.
+extract per-operator workloads from BERT-tiny (the paper's NLP benchmark)
+and tune them as one TuningSession — unique workloads deduped, searches
+warm-started from any existing database records, one shared trial budget —
+then report the network-level latency against the hand-written library
+mapping: Figure 7's experiment.
 
-Run:  PYTHONPATH=src:. python examples/tune_workload.py
+Run:  python examples/tune_workload.py
 """
 
-import numpy as np
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks import nets
-from repro.core import (AnalyticRunner, TuningDatabase, V5E,
-                        fixed_library_schedule, tune)
+from repro.core import AnalyticRunner, TuningDatabase, TuningSession, V5E
 
 
 def main() -> None:
     ops = nets.bert_tiny(dtype="int8")
-    runner = AnalyticRunner(V5E)
     db = TuningDatabase()
+    session = TuningSession(V5E, AnalyticRunner(V5E), database=db, log=print)
+    result = session.tune_model(ops, total_trials=32 * len(ops), seed=0)
 
-    t_tuned = t_fixed = 0.0
-    print(f"{'operator':44s} {'tuned':>10s} {'library':>10s}  speedup")
-    for count, wl in ops:
-        res = tune(wl, V5E, runner, trials=32, seed=0, database=db)
-        fx = runner.run(wl, fixed_library_schedule(wl, V5E))
-        if not np.isfinite(fx):
-            fx = res.best_latency
-        t_tuned += count * res.best_latency
-        t_fixed += count * fx
-        print(f"{wl.key():44s} {res.best_latency * 1e6:9.2f}us "
-              f"{fx * 1e6:9.2f}us  {fx / res.best_latency:6.2f}x  (x{count})")
+    print(f"\n{'operator':44s} {'tuned':>10s} {'library':>10s}  speedup")
+    for rep in result.reports:
+        print(f"{rep.workload.key():44s} {rep.best_latency * 1e6:9.2f}us "
+              f"{rep.fixed_latency * 1e6:9.2f}us  "
+              f"{rep.speedup_vs_fixed:6.2f}x  (x{rep.count})")
 
+    t_tuned, t_fixed = result.tuned_latency, result.fixed_latency
     print(f"\nbert-tiny total: tuned {t_tuned * 1e6:.1f} us, "
           f"library {t_fixed * 1e6:.1f} us "
           f"-> {(1 - t_tuned / t_fixed) * 100:.0f}% latency improvement")
-    print(f"database records: {len(db)}")
+    print(f"database records: {len(db)}, session summaries: "
+          f"{len(db.sessions)}")
 
 
 if __name__ == "__main__":

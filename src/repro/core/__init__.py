@@ -13,18 +13,23 @@ from repro.core.schedule import Schedule, Decision
 from repro.core.space import space_for, concretize, KernelParams
 from repro.core.sampler import TraceSampler
 from repro.core.cost_model import RidgeCostModel, features
-from repro.core.runner import InterpretRunner, AnalyticRunner, xla_latency
+from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
+                               xla_latency)
 from repro.core.database import TuningDatabase, global_database
 from repro.core.tuner import tune, TuneResult
-from repro.core.dispatch import (best_schedule, fixed_library_schedule,
-                                 kernel_params)
+from repro.core.session import (TuningSession, SessionResult, WorkloadReport,
+                                dedup_workloads, split_budget)
+from repro.core.dispatch import (best_schedule, ensure_tuned,
+                                 fixed_library_schedule, kernel_params)
 
 __all__ = [
     "HardwareConfig", "V5E", "V5E_VMEM32", "V5E_VMEM64", "V5E_MXU256",
     "INTERPRET", "SWEEP", "Workload", "matmul", "qmatmul", "gemv", "vmacc",
     "attention", "Schedule", "Decision", "space_for", "concretize",
     "KernelParams", "TraceSampler", "RidgeCostModel", "features",
-    "InterpretRunner", "AnalyticRunner", "xla_latency", "TuningDatabase",
-    "global_database", "tune", "TuneResult", "best_schedule",
+    "InterpretRunner", "AnalyticRunner", "run_batch", "xla_latency",
+    "TuningDatabase", "global_database", "tune", "TuneResult",
+    "TuningSession", "SessionResult", "WorkloadReport", "dedup_workloads",
+    "split_budget", "best_schedule", "ensure_tuned",
     "fixed_library_schedule", "kernel_params",
 ]

@@ -5,11 +5,18 @@ answers best-schedule lookups. This is the deployable artifact of a tuning
 run — the analogue of the tuned TVM module the paper ships to the board:
 after tuning once per hardware config, the framework dispatches every matching
 op through the stored best schedule with no further search.
+
+Beyond exact lookups the database answers *transfer* queries
+(:meth:`transfer_candidates`): the best schedules recorded for the same op
+family on other shapes or hardware configs, used to warm-start new searches
+(the paper's Fig. 4 schedule-transfer experiment), and stores session-level
+latency/speedup summaries from :class:`repro.core.session.TuningSession`.
 """
 
 from __future__ import annotations
 
 import json
+import math
 import os
 import tempfile
 from typing import Any
@@ -24,6 +31,8 @@ class TuningDatabase:
         # key -> list of {schedule, latency, runner}
         self.records: dict[str, list[dict[str, Any]]] = {}
         self.workloads: dict[str, dict] = {}
+        # session-level summaries, append-only (see TuningSession)
+        self.sessions: list[dict[str, Any]] = []
         if path and os.path.exists(path):
             self.load(path)
 
@@ -36,11 +45,21 @@ class TuningDatabase:
             latency_s: float, runner_name: str) -> None:
         key = self.record_key(workload, hw_name)
         self.workloads[key] = workload.to_json()
-        self.records.setdefault(key, []).append({
+        entry = {
             "schedule": schedule.to_json(),
             "latency_s": latency_s,
             "runner": runner_name,
-        })
+        }
+        bucket = self.records.setdefault(key, [])
+        # Exact duplicates add no information but accrete without bound when
+        # warm-started sessions re-measure deterministic records; drop them.
+        if entry in bucket:
+            return
+        bucket.append(entry)
+
+    def add_session(self, summary: dict[str, Any]) -> None:
+        """Append one session-level summary (latency/speedup per model)."""
+        self.sessions.append(dict(summary))
 
     # ---- queries ---------------------------------------------------------------
     def best(self, workload: Workload,
@@ -57,6 +76,49 @@ class TuningDatabase:
     def history(self, workload: Workload, hw_name: str) -> list[dict]:
         return list(self.records.get(self.record_key(workload, hw_name), ()))
 
+    def transfer_candidates(self, workload: Workload, hw_name: str,
+                            limit: int = 4) -> list[Schedule]:
+        """Warm-start schedules for a new search, best-first.
+
+        Ranking: exact (workload, hardware) records first — a prior session's
+        result for this very key — then the best record of every other
+        (shape, hardware) entry of the same op family, closest shape first
+        (Fig. 4: near-miss schedules transfer, far ones don't). Foreign
+        schedules that don't concretize on the new target are filtered by the
+        tuner, not here.
+        """
+        exact_key = self.record_key(workload, hw_name)
+        # (distance, latency, key, best-record); the unique key tiebreaks
+        # before the dict so sort never compares records.
+        scored: list[tuple[float, float, str, dict]] = []
+        for key, recs in self.records.items():
+            wl_json = self.workloads.get(key)
+            if wl_json is None or wl_json.get("op") != workload.op:
+                continue
+            finite = [r for r in recs
+                      if r["latency_s"] == r["latency_s"]
+                      and r["latency_s"] != float("inf")]
+            if not finite:
+                continue
+            if key == exact_key:
+                distance = -1.0  # always first
+            else:
+                distance = _shape_distance(workload.dims,
+                                           tuple(wl_json.get("dims", ())))
+            best = min(finite, key=lambda r: r["latency_s"])
+            scored.append((distance, best["latency_s"], key, best))
+        scored.sort(key=lambda t: t[:3])
+        out: list[Schedule] = []
+        seen: set[tuple] = set()
+        for _, _, _, rec in scored:
+            s = Schedule.from_json(rec["schedule"])
+            if s.signature() not in seen:
+                seen.add(s.signature())
+                out.append(s)
+            if len(out) >= limit:
+                break
+        return out
+
     def __len__(self):
         return sum(len(v) for v in self.records.values())
 
@@ -65,7 +127,8 @@ class TuningDatabase:
         path = path or self.path
         if path is None:
             raise ValueError("no path configured")
-        payload = {"records": self.records, "workloads": self.workloads}
+        payload = {"records": self.records, "workloads": self.workloads,
+                   "sessions": self.sessions}
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
         with os.fdopen(fd, "w") as f:
@@ -77,6 +140,15 @@ class TuningDatabase:
             payload = json.load(f)
         self.records = payload.get("records", {})
         self.workloads = payload.get("workloads", {})
+        self.sessions = payload.get("sessions", [])
+
+
+def _shape_distance(a: tuple[int, ...], b: tuple[int, ...]) -> float:
+    """Log-space distance between two dim tuples; inf across ranks."""
+    if len(a) != len(b):
+        return float("inf")
+    return sum(abs(math.log(max(x, 1)) - math.log(max(y, 1)))
+               for x, y in zip(a, b))
 
 
 _GLOBAL: TuningDatabase | None = None

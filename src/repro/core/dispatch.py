@@ -78,3 +78,33 @@ def kernel_params(workload: Workload, hw: HardwareConfig = V5E,
     if sched is None:
         return None, provenance
     return space_lib.concretize(workload, hw, sched), provenance
+
+
+def ensure_tuned(ops, hw: HardwareConfig = V5E,
+                 runner=None, database: TuningDatabase | None = None,
+                 trials_per_workload: int = 32, seed: int = 0,
+                 log=None):
+    """Fill the dispatch database for a whole model config.
+
+    Runs a :class:`~repro.core.session.TuningSession` over the workloads of
+    ``ops`` (``[(count, Workload), ...]``) that have **no** tuned record yet,
+    so every subsequent :func:`best_schedule` call for them resolves to
+    ``"tuned"``. Already-covered workloads are not re-tuned — calling this
+    before serving a model is idempotent and cheap on a warm database.
+
+    Returns the :class:`SessionResult`, or ``None`` if the database already
+    covers every workload.
+    """
+    from repro.core.runner import AnalyticRunner
+    from repro.core.session import TuningSession, dedup_workloads
+
+    db = database if database is not None else global_database()
+    missing = [(count, wl) for count, wl in dedup_workloads(ops)
+               if db.best(wl, hw.name) is None]
+    if not missing:
+        return None
+    runner = runner if runner is not None else AnalyticRunner(hw)
+    session = TuningSession(hw, runner, database=db, log=log)
+    return session.tune_model(missing,
+                              total_trials=trials_per_workload * len(missing),
+                              seed=seed)

@@ -18,8 +18,10 @@ Both satisfy the same ``Runner`` protocol; ``tuner.tune`` is agnostic.
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
 import time
-from typing import Callable, Protocol
+from typing import Callable, Protocol, Sequence
 
 import numpy as np
 
@@ -39,6 +41,21 @@ class Runner(Protocol):
         """Latency in seconds; inf if the candidate is invalid."""
         ...
 
+    def run_batch(self, workload: Workload,
+                  schedules: Sequence[Schedule]) -> list[float]:
+        """Latencies for a batch of candidates, aligned with ``schedules``."""
+        ...
+
+
+def run_batch(runner: Runner, workload: Workload,
+              schedules: Sequence[Schedule]) -> list[float]:
+    """Measure a batch on any runner, falling back to serial ``run`` calls
+    for runners that predate the batched protocol."""
+    batched = getattr(runner, "run_batch", None)
+    if batched is not None:
+        return list(batched(workload, schedules))
+    return [runner.run(workload, s) for s in schedules]
+
 
 @dataclasses.dataclass
 class InterpretRunner:
@@ -46,23 +63,30 @@ class InterpretRunner:
     repeats: int = 3
     warmup: int = 1
     name: str = "interpret"
+    # Batched measurement: candidate *builds* (trace + lower + first run, the
+    # expensive and crash-prone phase) overlap on a thread pool; wall-clock
+    # *timing* stays serial so measurements never contend for the host.
+    max_workers: int = 0  # 0 -> min(cpu_count, 8)
+    build_timeout_s: float = 60.0
 
-    def run(self, workload: Workload, schedule: Schedule) -> float:
+    def _prepare(self, workload: Workload,
+                 schedule: Schedule) -> Callable | None:
+        """Build + validate one candidate; ``None`` if it is invalid or its
+        Pallas build/first-run crashes (failure stays isolated to this
+        candidate)."""
         from repro import kernels  # lazy: avoid import cycle
 
         params = space_lib.concretize(workload, self.hw, schedule)
         if not params.valid:
-            return INVALID
+            return None
         try:
             fn = kernels.build(workload, params, interpret=True)
+            fn(*workload.example_inputs()).block_until_ready()
         except Exception:
-            return INVALID
-        inputs = workload.example_inputs()
-        try:
-            out = fn(*inputs)
-            out.block_until_ready()
-        except Exception:
-            return INVALID
+            return None
+        return fn
+
+    def _measure(self, fn: Callable, inputs) -> float:
         for _ in range(self.warmup):
             fn(*inputs).block_until_ready()
         best = INVALID
@@ -71,6 +95,53 @@ class InterpretRunner:
             fn(*inputs).block_until_ready()
             best = min(best, time.perf_counter() - t0)
         return best
+
+    def run(self, workload: Workload, schedule: Schedule) -> float:
+        fn = self._prepare(workload, schedule)
+        if fn is None:
+            return INVALID
+        return self._measure(fn, workload.example_inputs())
+
+    def run_batch(self, workload: Workload,
+                  schedules: Sequence[Schedule]) -> list[float]:
+        """Build the batch concurrently, then time survivors serially.
+
+        A *crashing* build costs only its own slot. A *hung* build cannot be
+        killed from a thread (process-pool isolation is a ROADMAP follow-on):
+        it forfeits itself plus whatever its held worker slot starves once
+        the batch deadline — ``build_timeout_s`` per concurrency wave, not
+        per candidate, so stalls never accumulate unboundedly — expires.
+        Workers are daemon threads, so a wedged build can never block
+        interpreter exit either.
+        """
+        schedules = list(schedules)
+        if len(schedules) <= 1:
+            return [self.run(workload, s) for s in schedules]
+        n = len(schedules)
+        workers = self.max_workers or min(n, os.cpu_count() or 1, 8)
+        slots = threading.Semaphore(workers)
+        results: list[Callable | None] = [None] * n
+        finished = [threading.Event() for _ in range(n)]
+
+        def build(i: int, s: Schedule) -> None:
+            with slots:
+                try:
+                    results[i] = self._prepare(workload, s)
+                finally:
+                    finished[i].set()
+
+        for i, s in enumerate(schedules):
+            threading.Thread(target=build, args=(i, s), daemon=True).start()
+        waves = -(-n // workers)  # ceil: full-queue passes over the slots
+        deadline = time.monotonic() + self.build_timeout_s * waves
+        fns: list[Callable | None] = []
+        for i in range(n):
+            ok = finished[i].wait(timeout=max(0.0,
+                                              deadline - time.monotonic()))
+            fns.append(results[i] if ok else None)
+        inputs = workload.example_inputs()
+        return [INVALID if fn is None else self._measure(fn, inputs)
+                for fn in fns]
 
 
 @dataclasses.dataclass
@@ -83,6 +154,11 @@ class AnalyticRunner:
     def run(self, workload: Workload, schedule: Schedule) -> float:
         params = space_lib.concretize(workload, self.hw, schedule)
         return self.latency(workload, params)
+
+    def run_batch(self, workload: Workload,
+                  schedules: Sequence[Schedule]) -> list[float]:
+        # The model is deterministic: the batch is exactly the serial path.
+        return [self.run(workload, s) for s in schedules]
 
     def latency(self, workload: Workload,
                 params: space_lib.KernelParams) -> float:

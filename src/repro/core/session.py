@@ -1,0 +1,216 @@
+"""Multi-workload tuning sessions — whole-network tuning as one unit.
+
+The paper tunes per extracted task and then deploys the whole network through
+the database; hand-looping over operators (what ``benchmarks/run.py`` and the
+examples used to do) re-tunes duplicate shapes and never reuses knowledge
+across runs. A :class:`TuningSession` closes that gap:
+
+- **dedup** — a model config (``[(count, Workload), ...]``, the format of
+  ``benchmarks.nets``) is collapsed to its unique workloads via
+  ``workload.key()``; repeated layers tune once and share the result;
+- **warm start** — each search is seeded with the best near-miss records
+  already in the :class:`TuningDatabase` (same key from a prior session, or
+  the same op family at a neighbouring shape/hardware — Fig. 4 transfer);
+- **shared budget** — a single trial budget is split across the unique
+  workloads, weighted by their contribution to model latency
+  (``count * flops``), with a per-workload floor;
+- **reporting** — per-workload progress lines plus a session-level
+  latency/speedup summary that is committed to the database.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Sequence
+
+from repro.core import tuner
+from repro.core.database import TuningDatabase
+from repro.core.hardware import HardwareConfig
+from repro.core.runner import Runner
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+ModelConfig = Sequence[tuple[int, Workload]]
+
+
+@dataclasses.dataclass
+class WorkloadReport:
+    """Per-unique-workload outcome within a session."""
+
+    workload: Workload
+    count: int  # occurrences in the model (dedup multiplicity)
+    trials: int
+    best_latency: float
+    best_schedule: Schedule | None
+    warm_started: int  # database warm-start candidates measured
+    fixed_latency: float  # hand-written library baseline on this runner
+    wall_time_s: float
+
+    @property
+    def total_latency(self) -> float:
+        return self.count * self.best_latency
+
+    @property
+    def speedup_vs_fixed(self) -> float:
+        if not (self.fixed_latency > 0 and self.best_latency > 0):
+            return float("nan")
+        return self.fixed_latency / self.best_latency
+
+
+@dataclasses.dataclass
+class SessionResult:
+    hw: HardwareConfig
+    runner_name: str
+    reports: list[WorkloadReport]
+    total_trials: int
+    wall_time_s: float
+
+    @property
+    def tuned_latency(self) -> float:
+        return sum(r.total_latency for r in self.reports)
+
+    @property
+    def fixed_latency(self) -> float:
+        return sum(r.count * r.fixed_latency for r in self.reports)
+
+    @property
+    def speedup_vs_fixed(self) -> float:
+        tuned = self.tuned_latency
+        if not (tuned > 0):
+            return float("nan")
+        return self.fixed_latency / tuned
+
+    def summary(self) -> dict:
+        """JSON-able session summary (what the database stores)."""
+        return {
+            "hw": self.hw.name,
+            "runner": self.runner_name,
+            "total_trials": self.total_trials,
+            "wall_time_s": self.wall_time_s,
+            "tuned_latency_s": self.tuned_latency,
+            "fixed_latency_s": self.fixed_latency,
+            "speedup_vs_fixed": self.speedup_vs_fixed,
+            "workloads": [{
+                "key": r.workload.key(),
+                "count": r.count,
+                "trials": r.trials,
+                "best_latency_s": r.best_latency,
+                "warm_started": r.warm_started,
+                "speedup_vs_fixed": r.speedup_vs_fixed,
+            } for r in self.reports],
+        }
+
+
+def dedup_workloads(ops: ModelConfig) -> list[tuple[int, Workload]]:
+    """Collapse a model config to unique workloads (first-seen order),
+    summing repeat counts — the session's unit of tuning work."""
+    order: list[str] = []
+    counts: dict[str, int] = {}
+    by_key: dict[str, Workload] = {}
+    for count, wl in ops:
+        key = wl.key()
+        if key not in counts:
+            order.append(key)
+            counts[key] = 0
+            by_key[key] = wl
+        counts[key] += count
+    return [(counts[k], by_key[k]) for k in order]
+
+
+def split_budget(weights: Sequence[float], total: int,
+                 floor: int = 4) -> list[int]:
+    """Deterministic proportional split of ``total`` trials with a floor.
+
+    Every entry gets at least ``floor``; the remainder is distributed
+    proportionally to ``weights`` (largest-remainder rounding), so the sum is
+    exactly ``max(total, len(weights) * floor)``.
+    """
+    n = len(weights)
+    if n == 0:
+        return []
+    total = max(int(total), n * floor)
+    spare = total - n * floor
+    wpos = [max(w, 0.0) for w in weights]
+    wsum = sum(wpos)
+    if wsum <= 0:  # degenerate weights: split the spare evenly
+        wpos, wsum = [1.0] * n, float(n)
+    raw = [spare * w / wsum for w in wpos]
+    alloc = [floor + int(r) for r in raw]
+    # largest fractional remainders absorb the rounding slack (ties: earlier
+    # workloads first, keeping the split deterministic)
+    leftover = total - sum(alloc)
+    by_frac = sorted(range(n), key=lambda i: (-(raw[i] - int(raw[i])), i))
+    for i in by_frac[:leftover]:
+        alloc[i] += 1
+    return alloc
+
+
+@dataclasses.dataclass
+class TuningSession:
+    """Tune every unique workload of a model under one shared trial budget,
+    warm-starting from (and committing back to) the tuning database."""
+
+    hw: HardwareConfig
+    runner: Runner
+    database: TuningDatabase | None = None
+    warm_start_limit: int = 4
+    min_trials: int = 4
+    batch: int = 8
+    log: Callable[[str], None] | None = None
+
+    def _log(self, msg: str) -> None:
+        if self.log:
+            self.log(msg)
+
+    def tune_model(self, ops: ModelConfig, total_trials: int = 256,
+                   seed: int = 0) -> SessionResult:
+        from repro.core.dispatch import fixed_library_schedule
+
+        t_start = time.perf_counter()
+        ops = list(ops)
+        unique = dedup_workloads(ops)
+        weights = [count * wl.flops() for count, wl in unique]
+        budgets = split_budget(weights, total_trials, floor=self.min_trials)
+        self._log(f"session: {len(ops)} ops -> {len(unique)} unique "
+                  f"workloads, {sum(budgets)} trials on {self.runner.name}"
+                  f"/{self.hw.name}")
+
+        reports: list[WorkloadReport] = []
+        for i, ((count, wl), trials) in enumerate(zip(unique, budgets)):
+            seeds: list[Schedule] = []
+            if self.database is not None:
+                seeds = self.database.transfer_candidates(
+                    wl, self.hw.name, limit=self.warm_start_limit)
+            res = tuner.tune(wl, self.hw, self.runner, trials=trials,
+                             seed=seed + i, database=self.database,
+                             batch=self.batch, warm_start=seeds)
+            fixed = self.runner.run(wl, fixed_library_schedule(wl, self.hw))
+            if not math.isfinite(fixed):  # library has no valid mapping here
+                fixed = res.best_latency
+            reports.append(WorkloadReport(
+                workload=wl, count=count, trials=res.trials,
+                best_latency=res.best_latency,
+                best_schedule=res.best_schedule,
+                warm_started=res.warm_started, fixed_latency=fixed,
+                wall_time_s=res.wall_time_s))
+            self._log(f"  [{i + 1}/{len(unique)}] {wl.key()} x{count}: "
+                      f"best {res.best_latency * 1e6:9.2f} us over "
+                      f"{res.trials} trials"
+                      f" (warm-start {res.warm_started})"
+                      f", library {fixed * 1e6:9.2f} us")
+
+        result = SessionResult(
+            hw=self.hw, runner_name=self.runner.name, reports=reports,
+            total_trials=sum(r.trials for r in reports),
+            wall_time_s=time.perf_counter() - t_start)
+        if self.database is not None:
+            self.database.add_session(result.summary())
+            if self.database.path:
+                self.database.save()
+        self._log(f"session: tuned {result.tuned_latency * 1e6:.1f} us vs "
+                  f"library {result.fixed_latency * 1e6:.1f} us "
+                  f"({result.speedup_vs_fixed:.2f}x) in "
+                  f"{result.wall_time_s:.1f}s")
+        return result

@@ -193,10 +193,10 @@ def instruction_census(workload: Workload, params: KernelParams) -> dict:
             gn, gk = params.grid
             gm = 1
         else:
+            # concretize always emits (m, n, k)- or (n, m, k)-major grids;
+            # accumulate only changes store behaviour, never the grid layout.
             a, b_, gk = params.grid
             gm, gn = (b_, a) if params.order == "nmk" else (a, b_)
-            if not params.accumulate:  # k-major grid layout
-                gk, gm, gn = params.grid
         steps = gm * gn * gk
         loads = 2 * steps  # x-block + w-block per step
         macs = steps

@@ -1,24 +1,30 @@
 """The tuning loop — the paper's three-step MetaSchedule cycle.
 
 Per iteration: (1) generate candidates by probabilistic sampling /
-evolutionary mutation of schedule traces, (2) build + measure each candidate
-on the runner (FPGA/board in the paper; interpret-mode or analytic model
-here), (3) feed the measured latency back into the cost model that ranks the
-next generation. The best measured schedule is committed to the database.
+evolutionary mutation of schedule traces, (2) build + measure the candidates
+*as a batch* on the runner (FPGA/board in the paper; interpret-mode or
+analytic model here — see ``Runner.run_batch``), (3) feed the measured
+latencies back into the cost model that ranks the next generation. The best
+measured schedule is committed to the database.
+
+A search can be *warm-started* from schedules recorded in a previous run
+(same workload, or a near-miss shape/hardware — the paper's Fig. 4 transfer
+experiment): they are measured first and seed both the cost model and the
+evolutionary population.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 from repro.core import space as space_lib
 from repro.core.cost_model import RidgeCostModel, features
 from repro.core.database import TuningDatabase
 from repro.core.evolution import EvolutionarySearch
 from repro.core.hardware import HardwareConfig
-from repro.core.runner import Runner
+from repro.core.runner import Runner, run_batch as _run_batch
 from repro.core.sampler import TraceSampler
 from repro.core.schedule import Schedule
 from repro.core.workload import Workload
@@ -33,6 +39,7 @@ class TuneResult:
     history: list[tuple[Schedule, float]]
     trials: int
     wall_time_s: float
+    warm_started: int = 0  # warm-start candidates actually measured
 
     @property
     def best_params(self):
@@ -46,6 +53,7 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
          database: TuningDatabase | None = None,
          warmup_fraction: float = 0.25,
          batch: int = 4,
+         warm_start: Sequence[Schedule] = (),
          log: Callable[[str], None] | None = None) -> TuneResult:
     t_start = time.perf_counter()
     space = space_lib.space_for(workload, hw)
@@ -58,13 +66,9 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
     best_s: Schedule | None = None
     best_l = float("inf")
 
-    def measure(s: Schedule) -> None:
+    def record(s: Schedule, latency: float) -> None:
         nonlocal best_s, best_l
-        sig = s.signature()
-        if sig in measured:
-            return
-        latency = runner.run(workload, s)
-        measured[sig] = latency
+        measured[s.signature()] = latency
         history.append((s, latency))
         params = space_lib.concretize(workload, hw, s)
         if params.valid and latency != float("inf"):
@@ -77,14 +81,39 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
                     log(f"  trial {len(history):3d}: {latency*1e6:10.1f} us  "
                         f"<- new best {s.as_dict()}")
 
+    def measure_batch(schedules: Sequence[Schedule]) -> int:
+        """Measure unseen candidates as one runner batch; returns how many."""
+        todo, seen = [], set()
+        for s in schedules:
+            sig = s.signature()
+            if sig in measured or sig in seen:
+                continue
+            seen.add(sig)
+            todo.append(s)
+        for s, latency in zip(todo, _run_batch(runner, workload, todo)):
+            record(s, latency)
+        return len(todo)
+
+    # Phase 0 — warm start from prior records (database transfer). Schedules
+    # from foreign spaces may not concretize here; they are skipped for free.
+    # Seeds take at most half the budget so even floor-budget workloads
+    # always perform some fresh search instead of only replaying records.
+    seeds = [s for s in warm_start
+             if space_lib.concretize(workload, hw, s).valid]
+    n_warm = measure_batch(seeds[:trials // 2])
+
     # Phase 1 — probabilistic sampling warm-up.
     n_warmup = max(4, int(trials * warmup_fraction))
     tries = 0
     while len(history) < min(n_warmup, trials) and tries < 50 * trials:
-        tries += 1
-        s = sampler.sample(space)
-        if space_lib.concretize(workload, hw, s).valid:
-            measure(s)
+        pending: list[Schedule] = []
+        want = min(batch, min(n_warmup, trials) - len(history))
+        while len(pending) < want and tries < 50 * trials:
+            tries += 1
+            s = sampler.sample(space)
+            if space_lib.concretize(workload, hw, s).valid:
+                pending.append(s)
+        measure_batch(pending)
 
     # Phase 2 — evolutionary search guided by the cost model.
     search.seed_population([s for s, _ in history])
@@ -96,10 +125,9 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
                                    exclude=set(measured))
         if not proposals:
             break
-        for s in proposals:
-            measure(s)
+        measure_batch(proposals)
 
     if database is not None and database.path:
         database.save()
     return TuneResult(workload, hw, best_s, best_l, history, len(history),
-                      time.perf_counter() - t_start)
+                      time.perf_counter() - t_start, warm_started=n_warm)

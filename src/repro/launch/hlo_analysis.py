@@ -162,14 +162,28 @@ def trip_count(while_line: str, cond: Computation | None) -> int:
     return best
 
 
+def _operand_names(args: str) -> list[str]:
+    """Operand symbol names from an op's argument text. Newer HLO dumps
+    annotate operands inline (``dot(f32[8,8]{1,0} %x, ...)``), so prefer
+    %-prefixed tokens and only fall back to bare tokens for old dumps."""
+    names = re.findall(r"%([\w.\-]+)", args)
+    if names:
+        return names
+    return re.findall(r"([\w.\-]+)", args)
+
+
 def _dot_flops(op: OpInfo, symbols: dict[str, str]) -> float:
     out_elems = 1
     for d in shape_dims(op.out_shape):
         out_elems *= d
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
-    operands = re.findall(r"%?([\w.\-]+)", op.line.split("(", 1)[1])
+    args = op.line.split("(", 1)[1].split(")", 1)[0]
+    operands = _operand_names(args)
     lhs_shape = symbols.get(operands[0], "") if operands else ""
     lhs_dims = shape_dims(lhs_shape)
+    if not lhs_dims:
+        # inline operand types: the first shape literal in the args is lhs
+        lhs_dims = shape_dims(args)
     contract = 1
     if m and m.group(1):
         for idx in m.group(1).split(","):
@@ -239,8 +253,8 @@ def analyze(text: str) -> CostSummary:
                 summary.collective_bytes_by_op[opc] += mult * factor * b
             if opc not in _SKIP_BYTES:
                 b = shape_bytes(op.out_shape)
-                operands = re.findall(r"%?([\w.\-]+)",
-                                      op.line.split("(", 1)[1])
+                operands = _operand_names(
+                    op.line.split("(", 1)[1].split(")", 1)[0])
                 for o in operands:
                     if o in symbols:
                         b += shape_bytes(symbols[o])

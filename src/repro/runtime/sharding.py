@@ -23,6 +23,21 @@ import re
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Version-compatible ``AbstractMesh`` constructor.
+
+    jax >= 0.5 takes ``AbstractMesh(axis_sizes, axis_names)``; jax 0.4.x
+    takes a single ``((name, size), ...)`` shape tuple. Sharding rules only
+    need mesh *shape*, so AbstractMesh works without devices on both.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # jax 0.4.x single-argument signature
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
 # Ordered (path-regex, spec-template) rules. Templates name mesh axes per
 # dim; "_" = replicated. Matched against "/".join(path keys).
 _RULES: list[tuple[str, tuple]] = [

@@ -15,6 +15,9 @@ from repro.models.model_zoo import build
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.train_loop import init_train_state, make_train_step
 
+# Full-zoo smoke runs take minutes; they ride behind --runslow (CI tier-2).
+pytestmark = pytest.mark.slow
+
 SMOKE = ShapeSpec("smoke", 32, 2, "train")
 
 

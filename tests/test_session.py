@@ -1,0 +1,253 @@
+"""Batched measurement (``Runner.run_batch``) and multi-workload
+:class:`TuningSession` tests, plus the instruction-census regression the
+batching PR fixed. All fast paths use the analytic runner; one end-to-end
+case drives ``InterpretRunner.run_batch`` on tiny shapes."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (AnalyticRunner, InterpretRunner, Schedule,
+                        TraceSampler, TuningDatabase, TuningSession, V5E,
+                        V5E_VMEM32, INTERPRET, concretize, dedup_workloads,
+                        ensure_tuned, fixed_library_schedule, space_for,
+                        split_budget, tune)
+from repro.core import workload as W
+from repro.core.runner import INVALID, run_batch
+from repro.core.space import instruction_census
+
+
+def _samples(wl, hw, n, seed=0):
+    space = space_for(wl, hw)
+    sampler = TraceSampler(seed)
+    out = []
+    while len(out) < n:
+        s = sampler.sample(space)
+        if concretize(wl, hw, s).valid and s not in out:
+            out.append(s)
+    return out
+
+
+# ------------------------------------------------------------- run_batch ----
+
+def test_analytic_run_batch_bit_identical_to_serial():
+    wl = W.matmul(512, 1024, 768, "bfloat16")
+    runner = AnalyticRunner(V5E)
+    schedules = _samples(wl, V5E, 16)
+    batched = runner.run_batch(wl, schedules)
+    serial = [runner.run(wl, s) for s in schedules]
+    assert batched == serial  # bit-identical, not approx
+
+
+def test_run_batch_helper_falls_back_to_serial_run():
+    class SerialOnly:
+        name = "serial"
+        hw = V5E
+
+        def run(self, workload, schedule):
+            return 1e-3
+
+    lats = run_batch(SerialOnly(), W.vmacc(8, 8), _samples(W.vmacc(8, 8),
+                                                           V5E, 2))
+    assert lats == [1e-3, 1e-3]
+
+
+def test_interpret_run_batch_matches_serial_validity():
+    """Parallel builds must produce the same valid/invalid split as serial
+    runs; an unknown-variant candidate is isolated, not batch-fatal."""
+    wl = W.matmul(8, 8, 8, "float32")
+    runner = InterpretRunner(INTERPRET, repeats=1, warmup=0)
+    good = _samples(wl, INTERPRET, 2)
+    bad = Schedule.fixed(variant="not_a_registered_variant")
+    lats = runner.run_batch(wl, [good[0], bad, good[1]])
+    assert len(lats) == 3
+    assert math.isfinite(lats[0]) and math.isfinite(lats[2])
+    assert lats[1] == INVALID
+
+
+def test_interpret_run_batch_isolates_crashing_builds(monkeypatch):
+    """A Pallas build that raises costs only its own slot."""
+    import repro.kernels as kernels
+
+    wl = W.vmacc(8, 8)
+    real_build = kernels.build
+    calls = {"n": 0}
+
+    def flaky_build(workload, params, interpret=True):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected build crash")
+        return real_build(workload, params, interpret=interpret)
+
+    monkeypatch.setattr(kernels, "build", flaky_build)
+    runner = InterpretRunner(INTERPRET, repeats=1, warmup=0, max_workers=1)
+    schedules = _samples(wl, INTERPRET, 2)
+    lats = runner.run_batch(wl, schedules)
+    assert lats[0] == INVALID  # the crashed candidate
+    assert math.isfinite(lats[1])  # its batch-mate survived
+
+
+# ------------------------------------------------ session building blocks ----
+
+def test_dedup_workloads_sums_counts_keeps_order():
+    a, b = W.matmul(8, 8, 8), W.vmacc(8, 8)
+    unique = dedup_workloads([(2, a), (1, b), (3, a)])
+    assert unique == [(5, a), (1, b)]
+
+
+def test_split_budget_floor_and_exact_sum():
+    alloc = split_budget([100.0, 10.0, 1.0], total=64, floor=4)
+    assert sum(alloc) == 64
+    assert all(a >= 4 for a in alloc)
+    assert alloc[0] > alloc[1] > alloc[2]
+    # floor dominates tiny budgets
+    assert split_budget([1.0, 1.0], total=2, floor=4) == [4, 4]
+    assert split_budget([], total=10) == []
+    # degenerate weights still spend the whole budget, evenly
+    assert split_budget([0.0, 0.0], total=64, floor=4) == [32, 32]
+    # deterministic
+    assert alloc == split_budget([100.0, 10.0, 1.0], total=64, floor=4)
+
+
+def test_transfer_candidates_ranks_exact_then_near():
+    db = TuningDatabase()
+    near = W.matmul(512, 512, 512, "bfloat16")
+    far = W.matmul(16, 16, 16, "bfloat16")
+    target = W.matmul(600, 512, 512, "bfloat16")
+    db.add(near, V5E.name, Schedule.fixed(variant="near"), 2e-3, "analytic")
+    db.add(far, V5E.name, Schedule.fixed(variant="far"), 1e-3, "analytic")
+    db.add(target, V5E.name, Schedule.fixed(variant="exact"), 5e-3, "analytic")
+    db.add(W.vmacc(8, 8), V5E.name, Schedule.fixed(variant="other_op"),
+           1e-6, "analytic")
+    seeds = db.transfer_candidates(target, V5E.name, limit=3)
+    assert [s["variant"] for s in seeds] == ["exact", "near", "far"]
+
+
+# ------------------------------------------------------- tuning sessions ----
+
+def test_session_dedups_and_splits_budget(tmp_path):
+    wl_a = W.matmul(256, 256, 256, "bfloat16")
+    wl_b = W.vmacc(128, 1024)
+    ops = [(2, wl_a), (1, wl_b), (4, wl_a)]  # wl_a repeated
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    session = TuningSession(V5E, AnalyticRunner(V5E), database=db)
+    res = session.tune_model(ops, total_trials=24, seed=0)
+    assert [r.workload for r in res.reports] == [wl_a, wl_b]
+    assert res.reports[0].count == 6 and res.reports[1].count == 1
+    assert res.total_trials == 24
+    assert all(math.isfinite(r.best_latency) for r in res.reports)
+    # session summary committed and persisted
+    assert len(db.sessions) == 1
+    assert db.sessions[0]["total_trials"] == 24
+    db2 = TuningDatabase(str(tmp_path / "db.json"))
+    assert len(db2.sessions) == 1
+    assert {w["key"] for w in db2.sessions[0]["workloads"]} == \
+        {wl_a.key(), wl_b.key()}
+
+
+def test_session_warm_starts_from_database():
+    """A record from a previous session (near-miss shape) seeds the new
+    search, which can then never end up worse than the transferred schedule."""
+    prior = W.matmul(512, 512, 512, "bfloat16")
+    target = W.matmul(512, 512, 640, "bfloat16")
+    runner = AnalyticRunner(V5E)
+    db = TuningDatabase()
+    r_prior = tune(prior, V5E, runner, trials=24, seed=0, database=db)
+    assert r_prior.warm_started == 0  # cold database: nothing to seed from
+    session = TuningSession(V5E, runner, database=db)
+    res = session.tune_model([(1, target)], total_trials=8, seed=1)
+    rep = res.reports[0]
+    assert rep.warm_started >= 1  # the Fig. 4 transfer hit
+    carried = min(runner.run(target, s)
+                  for s in db.transfer_candidates(target, V5E.name))
+    assert rep.best_latency <= carried + 1e-15
+
+
+def test_session_multi_op_interpret_end_to_end(tmp_path):
+    """Acceptance path: a multi-op model tuned through
+    InterpretRunner.run_batch (parallel builds), deduped, database-backed."""
+    wl_mm = W.matmul(8, 8, 8, "float32")
+    wl_vm = W.vmacc(8, 8)
+    ops = [(2, wl_mm), (1, wl_vm), (1, wl_mm)]
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    runner = InterpretRunner(INTERPRET, repeats=1, warmup=0)
+    session = TuningSession(INTERPRET, runner, database=db, min_trials=3)
+    res = session.tune_model(ops, total_trials=6, seed=0)
+    assert len(res.reports) == 2  # deduped
+    assert res.reports[0].count == 3
+    for rep in res.reports:
+        assert math.isfinite(rep.best_latency) and rep.best_latency > 0
+        assert rep.best_schedule is not None
+    assert db.best(wl_mm, INTERPRET.name) is not None
+    assert db.sessions and db.sessions[0]["runner"] == "interpret"
+
+
+def test_ensure_tuned_fills_only_missing(tmp_path):
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    covered = W.matmul(128, 128, 128, "bfloat16")
+    missing = W.vmacc(64, 128)
+    tune(covered, V5E, AnalyticRunner(V5E), trials=8, seed=0, database=db)
+    n_before = len(db.history(covered, V5E.name))
+    res = ensure_tuned([(1, covered), (2, missing)], hw=V5E, database=db,
+                       trials_per_workload=8)
+    assert res is not None
+    assert [r.workload for r in res.reports] == [missing]
+    assert db.best(missing, V5E.name) is not None
+    # idempotent: everything covered now
+    assert len(db.history(covered, V5E.name)) == n_before
+    assert ensure_tuned([(1, covered), (2, missing)], hw=V5E,
+                        database=db) is None
+
+
+def test_tune_warm_start_counts_toward_trials():
+    wl = W.matmul(256, 512, 512, "bfloat16")
+    runner = AnalyticRunner(V5E)
+    seed_schedule = fixed_library_schedule(wl, V5E)
+    res = tune(wl, V5E, runner, trials=8, seed=0,
+               warm_start=[seed_schedule])
+    assert res.warm_started == 1
+    assert res.trials == 8
+    assert res.history[0][0] == seed_schedule  # measured first
+    assert res.best_latency <= runner.run(wl, seed_schedule)
+
+
+# --------------------------------------------- instruction census (bugfix) ----
+
+def _census_pair(order):
+    wl = W.matmul(1024, 512, 8192, "bfloat16")  # deep K: Fig. 5's regime
+    variant = space_for(wl, V5E)["variant"][0]
+    base = Schedule.fixed(variant=variant, m_scale=0.25, n_scale=0.25,
+                          k_scale=0.25, order=order, accumulate=True)
+    p_acc = concretize(wl, V5E, base)
+    p_no = concretize(wl, V5E, base.replace("accumulate", False))
+    return wl, p_acc, p_no
+
+
+@pytest.mark.parametrize("order", ["mnk", "nmk"])
+def test_census_accumulate_vs_store_heavy(order):
+    """Regression: non-accumulate schedules used to be unpacked as a k-major
+    grid that ``concretize`` never emits, corrupting the store/load counts
+    behind the paper's headline store-fraction metric."""
+    wl, p_acc, p_no = _census_pair(order)
+    assert p_acc.grid == p_no.grid  # accumulate never changes the grid
+    a, b, gk = p_no.grid
+    gm, gn = (b, a) if order == "nmk" else (a, b)
+    steps = gm * gn * gk
+    c_acc = instruction_census(wl, p_acc)
+    c_no = instruction_census(wl, p_no)
+    # identical compute, divergent memory behaviour
+    assert c_acc["macs"] == c_no["macs"] == steps
+    assert c_acc["loads"] == 2 * steps
+    assert c_acc["stores"] == gm * gn  # output tile written once
+    assert c_no["stores"] == steps  # partials written every k step
+    assert c_no["loads"] == 2 * steps + (steps - gm * gn)
+    assert c_no["store_fraction"] > c_acc["store_fraction"]
+
+
+def test_census_store_fraction_tuned_vs_library():
+    """The paper's Fig. 5 headline: accumulate-in-VMEM schedules keep the
+    store fraction tiny; the store-happy library path does not."""
+    wl, p_acc, p_no = _census_pair("mnk")
+    assert instruction_census(wl, p_acc)["store_fraction"] < 0.01
+    assert instruction_census(wl, p_no)["store_fraction"] > 0.1
