@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimbing driver: lower one (arch x shape) cell under a named
 variant, re-run the roofline analysis, and print the three terms + the
 collective breakdown — the measure step of the hypothesis -> change ->
@@ -15,25 +12,37 @@ Variants (composable via comma):
   remat_dots      save matmul outputs instead of full remat
   ga<N>           gradient accumulation factor N
   ep_heads        decode cache prefers kv-head sharding (default already)
+
+A second measure step, ``--tune-overlap M,N,K``, targets the *tuning* loop
+itself: it tunes the given matmul on this host synchronously and with the
+pipelined measure/search loop (``pipeline_depth=2``) and prints wall-time
+plus the measured-while-evolving (overlap) fraction — the hillclimb metric
+for the asynchronous tuner pipeline.
 """
 
 import argparse
 import json
+import os
+import sys
 import time
 
-import jax
-
-from repro.configs import SHAPES, get_config
-from repro.launch import hlo_analysis
-from repro.launch.dryrun import (GRAD_ACCUM, build_cell, model_flops,
-                                 roofline)
-from repro.launch.mesh import make_production_mesh
-from repro.models import layers as model_layers
-from repro.runtime import sharding as sh
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 
 def run_variant(arch: str, shape_name: str, variant: str,
                 multi_pod: bool = False) -> dict:
+    # heavy launch-path imports stay inside the variant path so the
+    # --tune-overlap mode never pays for them (XLA_FLAGS is set in main()
+    # before jax is first imported)
+    from repro.configs import SHAPES, get_config
+    from repro.launch import hlo_analysis
+    from repro.launch.dryrun import build_cell, roofline
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import layers as model_layers
+    from repro.runtime import sharding as sh
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = 512 if multi_pod else 256
     cfg = get_config(arch)
@@ -96,13 +105,51 @@ def run_variant(arch: str, shape_name: str, variant: str,
     }
 
 
+def run_tune_overlap(spec: str, trials: int = 12) -> dict:
+    """Measure step for the tuner pipeline: sync vs pipelined wall-time and
+    overlap fraction for one matmul tuned on this host (interpret mode)."""
+    from repro.core import INTERPRET, InterpretRunner, tune
+    from repro.core import workload as W
+
+    m, n, k = (int(x) for x in spec.split(","))
+    wl = W.matmul(m, n, k, "float32")
+    runner = InterpretRunner(INTERPRET, repeats=2)
+    sync = tune(wl, INTERPRET, runner, trials=trials, seed=0)
+    piped = tune(wl, INTERPRET, runner, trials=trials, seed=0,
+                 pipeline_depth=2)
+    return {
+        "workload": wl.key(),
+        "trials": trials,
+        "sync_wall_s": round(sync.wall_time_s, 2),
+        "pipelined_wall_s": round(piped.wall_time_s, 2),
+        "speedup_vs_sync": round(sync.wall_time_s / piped.wall_time_s, 3),
+        "measure_time_s": round(piped.measure_time_s, 2),
+        "overlap_s": round(piped.overlap_s, 2),
+        "overlap_fraction": round(piped.overlap_fraction, 3),
+        "best_latency_us_sync": round(sync.best_latency * 1e6, 1),
+        "best_latency_us_pipelined": round(piped.best_latency * 1e6, 1),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--variants", default="baseline")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tune-overlap", default=None, metavar="M,N,K",
+                    help="instead of lowering a cell, benchmark the "
+                         "sync-vs-pipelined tuner loop on this matmul")
+    ap.add_argument("--tune-trials", type=int, default=12)
     args = ap.parse_args()
+    if args.tune_overlap:
+        rec = run_tune_overlap(args.tune_overlap, args.tune_trials)
+        print(f"[perf] tuner pipeline {args.tune_overlap}", flush=True)
+        print(json.dumps(rec, indent=1), flush=True)
+        return
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape are required unless --tune-overlap")
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     out = {}
     for variant in args.variants.split("+"):
         print(f"[perf] {args.arch}/{args.shape} variant={variant}",

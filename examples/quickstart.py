@@ -29,9 +29,10 @@ def main() -> None:
     runner = InterpretRunner(INTERPRET, repeats=3)
     db = TuningDatabase()
 
-    print("\ntuning (32 trials, measured on this host)...")
+    print("\ntuning (32 trials, measured on this host; pipeline depth 2 —")
+    print("generation N+1 evolves while generation N is on the 'board')...")
     res = tune(wl, INTERPRET, runner, trials=32, seed=0, database=db,
-               log=print)
+               log=print, pipeline_depth=2)
 
     fixed = fixed_library_schedule(wl, INTERPRET)
     t_fixed = runner.run(wl, fixed)
@@ -45,6 +46,9 @@ def main() -> None:
     print(f"\ntuned vs library: {t_fixed / res.best_latency:.2f}x")
     print(f"tuning cost: {res.wall_time_s / res.trials:.2f} s/candidate "
           f"({res.trials} candidates)")
+    print(f"pipeline: {res.measure_time_s:.1f}s measuring, "
+          f"{res.overlap_s:.1f}s of it hidden behind search "
+          f"(overlap {res.overlap_fraction:.0%})")
 
     best = db.best(wl, INTERPRET.name)
     assert best is not None

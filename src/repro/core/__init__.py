@@ -15,8 +15,10 @@ from repro.core.sampler import TraceSampler
 from repro.core.cost_model import RidgeCostModel, features
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
                                xla_latency)
-from repro.core.database import TuningDatabase, global_database
-from repro.core.tuner import tune, TuneResult
+from repro.core.measure_pool import MeasurePool, SubprocessRunner
+from repro.core.database import (TuningDatabase, global_database,
+                                 reset_global_database)
+from repro.core.tuner import tune, TuneDriver, TuneResult
 from repro.core.session import (TuningSession, SessionResult, WorkloadReport,
                                 dedup_workloads, split_budget)
 from repro.core.dispatch import (best_schedule, ensure_tuned,
@@ -27,8 +29,10 @@ __all__ = [
     "INTERPRET", "SWEEP", "Workload", "matmul", "qmatmul", "gemv", "vmacc",
     "attention", "Schedule", "Decision", "space_for", "concretize",
     "KernelParams", "TraceSampler", "RidgeCostModel", "features",
-    "InterpretRunner", "AnalyticRunner", "run_batch", "xla_latency",
-    "TuningDatabase", "global_database", "tune", "TuneResult",
+    "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
+    "run_batch", "xla_latency",
+    "TuningDatabase", "global_database", "reset_global_database",
+    "tune", "TuneDriver", "TuneResult",
     "TuningSession", "SessionResult", "WorkloadReport", "dedup_workloads",
     "split_budget", "best_schedule", "ensure_tuned",
     "fixed_library_schedule", "kernel_params",

@@ -33,6 +33,11 @@ class TuningDatabase:
         self.workloads: dict[str, dict] = {}
         # session-level summaries, append-only (see TuningSession)
         self.sessions: list[dict[str, Any]] = []
+        # memoized best() lookups (serving-path dispatch cache): key ->
+        # (Schedule, latency) | None, invalidated per-key by add() and
+        # wholesale by load(). Schedules are immutable, so sharing the
+        # cached instance across callers is safe.
+        self._best_cache: dict[str, tuple[Schedule, float] | None] = {}
         if path and os.path.exists(path):
             self.load(path)
 
@@ -43,6 +48,11 @@ class TuningDatabase:
     # ---- updates ---------------------------------------------------------------
     def add(self, workload: Workload, hw_name: str, schedule: Schedule,
             latency_s: float, runner_name: str) -> None:
+        # Non-finite latencies (failed/invalid candidates) carry no
+        # information and would break strict-JSON persistence ("Infinity" is
+        # not JSON); reject them here so no caller needs to filter.
+        if not math.isfinite(latency_s):
+            return
         key = self.record_key(workload, hw_name)
         self.workloads[key] = workload.to_json()
         entry = {
@@ -56,22 +66,33 @@ class TuningDatabase:
         if entry in bucket:
             return
         bucket.append(entry)
+        self._best_cache.pop(key, None)
 
     def add_session(self, summary: dict[str, Any]) -> None:
-        """Append one session-level summary (latency/speedup per model)."""
-        self.sessions.append(dict(summary))
+        """Append one session-level summary (latency/speedup per model).
+        Non-finite floats (e.g. a NaN speedup when nothing tuned) are
+        sanitized to ``None`` so the stored payload stays strict JSON."""
+        self.sessions.append(_json_sanitize(dict(summary)))
 
     # ---- queries ---------------------------------------------------------------
     def best(self, workload: Workload,
              hw_name: str) -> tuple[Schedule, float] | None:
+        """Best record for (workload, hardware); memoized per key so hot
+        serving-path dispatch is O(1) instead of re-scanning and re-parsing
+        ``Schedule.from_json`` on every call."""
         key = self.record_key(workload, hw_name)
+        if key in self._best_cache:
+            return self._best_cache[key]
         recs = [r for r in self.records.get(key, ())
                 if r["latency_s"] == r["latency_s"]
                 and r["latency_s"] != float("inf")]
         if not recs:
-            return None
-        top = min(recs, key=lambda r: r["latency_s"])
-        return Schedule.from_json(top["schedule"]), top["latency_s"]
+            result = None
+        else:
+            top = min(recs, key=lambda r: r["latency_s"])
+            result = (Schedule.from_json(top["schedule"]), top["latency_s"])
+        self._best_cache[key] = result
+        return result
 
     def history(self, workload: Workload, hw_name: str) -> list[dict]:
         return list(self.records.get(self.record_key(workload, hw_name), ()))
@@ -131,9 +152,18 @@ class TuningDatabase:
                    "sessions": self.sessions}
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, path)  # atomic
+        try:
+            with os.fdopen(fd, "w") as f:
+                # strict JSON: add()/add_session() keep non-finite floats
+                # out, so a failure here is a real serialization bug
+                json.dump(payload, f, allow_nan=False)
+            os.replace(tmp, path)  # atomic
+        except BaseException:
+            try:
+                os.unlink(tmp)  # never leak the temp file on a failed write
+            except OSError:
+                pass
+            raise
 
     def load(self, path: str) -> None:
         with open(path) as f:
@@ -141,6 +171,18 @@ class TuningDatabase:
         self.records = payload.get("records", {})
         self.workloads = payload.get("workloads", {})
         self.sessions = payload.get("sessions", [])
+        self._best_cache.clear()
+
+
+def _json_sanitize(x: Any) -> Any:
+    """Replace non-finite floats with None so payloads stay strict JSON."""
+    if isinstance(x, dict):
+        return {k: _json_sanitize(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_json_sanitize(v) for v in x]
+    if isinstance(x, float) and not math.isfinite(x):
+        return None
+    return x
 
 
 def _shape_distance(a: tuple[int, ...], b: tuple[int, ...]) -> float:
@@ -154,15 +196,31 @@ def _shape_distance(a: tuple[int, ...], b: tuple[int, ...]) -> float:
 _GLOBAL: TuningDatabase | None = None
 
 
+def _default_db_path() -> str:
+    return os.path.abspath(
+        os.environ.get("REPRO_TUNING_DB",
+                       os.path.join(os.path.dirname(__file__),
+                                    "..", "..", "..", "tuned",
+                                    "database.json")))
+
+
 def global_database() -> TuningDatabase:
-    """Process-wide database; path overridable via REPRO_TUNING_DB."""
+    """Process-wide database; path overridable via REPRO_TUNING_DB.
+
+    The env var is re-resolved on *every* call: repointing REPRO_TUNING_DB
+    at a new tuned artifact (serving reload, tests) takes effect on the next
+    lookup instead of being pinned to the first value seen. The instance is
+    cached per resolved path, so steady-state calls stay cheap."""
     global _GLOBAL
-    if _GLOBAL is None:
-        path = os.environ.get("REPRO_TUNING_DB",
-                              os.path.join(os.path.dirname(__file__),
-                                           "..", "..", "..", "tuned",
-                                           "database.json"))
-        path = os.path.abspath(path)
+    path = _default_db_path()
+    if _GLOBAL is None or _GLOBAL.path != path:
         _GLOBAL = TuningDatabase(path if os.path.exists(path) else None)
         _GLOBAL.path = path
     return _GLOBAL
+
+
+def reset_global_database() -> None:
+    """Drop the cached process-wide database; the next ``global_database()``
+    call re-reads the file from disk (tests / serving artifact reload)."""
+    global _GLOBAL
+    _GLOBAL = None

@@ -7,6 +7,13 @@ chain (mirroring how a TVM deployment uses its tuning log):
   2. fixed   — the hand-written library default (the muRISCV-NN analogue);
   3. None    — fall back to XLA's own lowering of the jnp op (the
                compiler-autovectorization analogue).
+
+Dispatch is on the serving hot path (every op instance of every request
+resolves through it), so both rungs are memoized per
+``(workload.key(), hw.name)``: tuned lookups through the per-key cache on
+``TuningDatabase.best`` (invalidated by ``add``/``load``), fixed-library
+schedules through a module-level cache here (they are a pure function of
+workload and hardware). Per-call dispatch is O(1) under serving traffic.
 """
 
 from __future__ import annotations
@@ -18,11 +25,27 @@ from repro.core.schedule import Schedule
 from repro.core.workload import Workload
 
 
+# (workload key, hardware name) -> Schedule; bounded by the distinct
+# workloads a process serves. Schedules are immutable, sharing is safe.
+_FIXED_CACHE: dict[tuple[str, str], Schedule] = {}
+
+
 def fixed_library_schedule(workload: Workload, hw: HardwareConfig) -> Schedule:
     """The hand-crafted default: one fixed choice per op family, written once
     for the baseline hardware and *not* re-derived per config (exactly the
     property of muRISCV-NN the paper exploits: its kernels assume one VLEN).
+    Memoized per (workload, hardware) — see module docstring.
     """
+    cache_key = (workload.key(), hw.name)
+    cached = _FIXED_CACHE.get(cache_key)
+    if cached is not None:
+        return cached
+    schedule = _FIXED_CACHE[cache_key] = _fixed_library_schedule(workload, hw)
+    return schedule
+
+
+def _fixed_library_schedule(workload: Workload,
+                            hw: HardwareConfig) -> Schedule:
     from repro.core import intrinsics  # local to avoid cycles
 
     variants = intrinsics.variants_for(workload, hw)

@@ -1,0 +1,412 @@
+"""Process-pool candidate measurement with a true per-candidate timeout kill.
+
+``InterpretRunner.run_batch`` isolates *crashing* builds on daemon threads,
+but a *wedged* build (an infinite loop inside Pallas tracing, a pathological
+interpret graph) cannot be killed from a thread: it forfeits its worker slot
+until the batch deadline and leaks the thread for the process lifetime.
+
+:class:`MeasurePool` removes that failure mode by running each candidate in a
+persistent worker *process*:
+
+- a candidate that exceeds ``timeout_s`` is killed with ``Process.kill()``
+  (SIGKILL) and its worker is respawned, so the slot is reusable immediately
+  and a hung build can never starve the pool;
+- a candidate that crashes its worker outright (segfault, ``os._exit``) is
+  reported as a crash and the worker is respawned the same way;
+- a candidate whose task merely *raises* is reported as an error and the
+  worker stays up (no respawn cost).
+
+Workers are persistent: the expensive part of process isolation (spawning an
+interpreter and importing jax) is paid once per worker, not per candidate —
+and never against a candidate's deadline: a worker signals readiness after
+its optional ``initializer`` runs, dispatch waits for that signal (bounded
+by ``spawn_timeout_s``), and only then does the per-task ``timeout_s`` clock
+start. A slow build after a respawn is therefore judged on its own cost, not
+on the respawn's.
+
+:class:`SubprocessRunner` packages the pool as a :class:`~repro.core.runner`
+-protocol runner: each candidate is built **and** timed by an
+``InterpretRunner`` inside a worker, so it is a drop-in replacement wherever
+``InterpretRunner`` is used, with kill semantics instead of abandon
+semantics. Timeouts and crashes surface as ``INVALID`` latencies, exactly
+like a failed build does today.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import multiprocessing.connection
+import os
+import time
+from collections import deque
+from typing import Any, Callable, Sequence
+
+from repro.core.hardware import HardwareConfig
+from repro.core.runner import INVALID
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass
+class TaskOutcome:
+    """Result of one pool task.
+
+    ``status`` is one of:
+      - ``"ok"``      — task returned; ``value`` holds the result;
+      - ``"error"``   — task raised; worker survived; ``error`` holds repr;
+      - ``"timeout"`` — task exceeded the deadline; worker was killed;
+      - ``"crash"``   — worker process died mid-task.
+    """
+
+    status: str
+    value: Any = None
+    error: str | None = None
+    elapsed_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+def _worker_loop(conn, task: Callable[[Any], Any],
+                 initializer: Callable[[], None] | None = None) -> None:
+    """Worker-process main: initialize, signal readiness, then recv payload,
+    run task, send outcome, repeat."""
+    try:
+        if initializer is not None:
+            initializer()
+        conn.send(("ready", os.getpid()))
+    except BaseException:
+        return  # parent sees EOF / a missing ready and retires the worker
+    while True:
+        try:
+            payload = conn.recv()
+        except (EOFError, OSError):
+            return
+        try:
+            result = task(payload)
+        except BaseException as e:  # task errors must not kill the worker
+            try:
+                conn.send(("error", f"{type(e).__name__}: {e}"))
+            except (BrokenPipeError, OSError):
+                return
+        else:
+            try:
+                conn.send(("ok", result))
+            except (BrokenPipeError, OSError):
+                return
+
+
+class _Worker:
+    """One persistent worker process plus its parent-side pipe end."""
+
+    def __init__(self, ctx, task: Callable[[Any], Any],
+                 initializer: Callable[[], None] | None = None):
+        self.conn, child = ctx.Pipe(duplex=True)
+        self.proc = ctx.Process(target=_worker_loop,
+                                args=(child, task, initializer),
+                                daemon=True)
+        self.proc.start()
+        child.close()
+        self.ready = False
+        self.dead = False
+
+    def wait_ready(self, timeout_s: float) -> bool:
+        """Consume the worker's ready signal if it has arrived (or arrives
+        within ``timeout_s``). Spawn/import cost is paid before the signal,
+        *outside* any task deadline. Sets ``dead`` if the worker died while
+        initializing (distinguishes "not yet" from "never")."""
+        if self.ready:
+            return True
+        try:
+            if self.conn.poll(timeout_s):
+                msg = self.conn.recv()
+                self.ready = isinstance(msg, tuple) and msg[0] == "ready"
+                if not self.ready:
+                    self.dead = True  # protocol violation: don't trust it
+        except (EOFError, OSError):
+            self.dead = True
+        return self.ready
+
+    def kill(self) -> None:
+        try:
+            self.proc.kill()
+            self.proc.join(timeout=5.0)
+        finally:
+            self.conn.close()
+
+    def close(self) -> None:
+        """Graceful shutdown: closing the pipe EOFs the worker loop."""
+        self.conn.close()
+        self.proc.join(timeout=1.0)
+        if self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(timeout=5.0)
+
+
+class MeasurePool:
+    """A fixed-size pool of persistent worker processes.
+
+    ``task`` must be a module-level (picklable-by-reference) callable taking
+    one payload argument; it is shipped to each worker once at spawn. The
+    default ``mp_context`` is ``"spawn"`` — fork is unsafe once jax has
+    started threads in the parent.
+    """
+
+    def __init__(self, task: Callable[[Any], Any], workers: int = 1,
+                 timeout_s: float = 60.0, mp_context: str = "spawn",
+                 initializer: Callable[[], None] | None = None,
+                 spawn_timeout_s: float = 300.0):
+        self.task = task
+        self.workers = max(1, int(workers))
+        self.timeout_s = timeout_s
+        self.initializer = initializer
+        self.spawn_timeout_s = spawn_timeout_s
+        self.ctx = mp.get_context(mp_context)
+        self._pool: list[_Worker | None] = [None] * self.workers
+        self.restarts = 0  # workers killed (timeout) or lost (crash)
+
+    # ---- lifecycle -------------------------------------------------------------
+    def _retire(self, i: int) -> None:
+        w = self._pool[i]
+        if w is not None:
+            w.kill()
+        self._pool[i] = None
+        self.restarts += 1
+
+    def close(self) -> None:
+        for i, w in enumerate(self._pool):
+            if w is not None:
+                w.close()
+            self._pool[i] = None
+
+    def __enter__(self) -> "MeasurePool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # ---- execution -------------------------------------------------------------
+    def run_many(self, payloads: Sequence[Any]) -> list[TaskOutcome]:
+        """Run every payload, ``workers`` at a time; results stay aligned
+        with ``payloads``. Each task gets its own ``timeout_s`` deadline,
+        which starts at dispatch to a *ready* worker — (re)spawns happen
+        asynchronously (``booting`` slots), so neither the in-worker imports
+        nor another slot's respawn is ever billed to a task's budget, and a
+        respawn can never delay the deadline kill of a different worker."""
+        payloads = list(payloads)
+        outcomes: list[TaskOutcome | None] = [None] * len(payloads)
+        queue = deque(enumerate(payloads))
+        active: dict[int, tuple[int, float, float]] = {}  # slot -> (idx, deadline, t0)
+        booting: dict[int, float] = {}  # slot -> spawn deadline
+        idle: deque[int] = deque()  # slots whose workers are ready
+        spawn_fails = [0] * self.workers
+
+        def launch(slot: int) -> None:
+            """(Re)spawn slot's worker without blocking; give up on the slot
+            after repeated spawn failures so a broken task/initializer can't
+            respawn forever."""
+            if spawn_fails[slot] >= 2:
+                return
+            w = self._pool[slot]
+            if w is not None:
+                w.kill()
+            self._pool[slot] = _Worker(self.ctx, self.task, self.initializer)
+            booting[slot] = time.monotonic() + self.spawn_timeout_s
+
+        for slot in range(min(self.workers, len(payloads))):
+            w = self._pool[slot]
+            if w is not None and w.proc.is_alive() and not w.dead:
+                if w.ready or w.wait_ready(0):
+                    idle.append(slot)
+                else:  # still booting from a previous call: keep waiting
+                    booting[slot] = time.monotonic() + self.spawn_timeout_s
+            else:
+                launch(slot)
+
+        def dispatch() -> None:
+            while queue and idle:
+                slot = idle.popleft()
+                idx, payload = queue.popleft()
+                try:
+                    self._pool[slot].conn.send(payload)
+                except (BrokenPipeError, OSError):
+                    # worker died between tasks: requeue, respawn the slot
+                    queue.appendleft((idx, payload))
+                    self._retire(slot)
+                    launch(slot)
+                    continue
+                now = time.monotonic()
+                active[slot] = (idx, now + self.timeout_s, now)
+
+        dispatch()
+        while queue or active:
+            if not active and not booting and not idle:
+                # no worker running, coming up, or available: the remaining
+                # payloads can never execute (spawns exhausted)
+                while queue:
+                    idx, _ = queue.popleft()
+                    outcomes[idx] = TaskOutcome(
+                        "crash", error="no pool worker could be started")
+                break
+            watch = {self._pool[slot].conn: ("task", slot)
+                     for slot in active}
+            watch.update({self._pool[slot].conn: ("boot", slot)
+                          for slot in booting})
+            deadlines = ([dl for _, dl, _ in active.values()]
+                         + list(booting.values()))
+            wait_s = max(0.0, min(deadlines) - time.monotonic()) \
+                if deadlines else None
+            for conn in mp.connection.wait(list(watch), timeout=wait_s):
+                kind, slot = watch[conn]
+                if kind == "boot":
+                    w = self._pool[slot]
+                    if w.wait_ready(0):
+                        booting.pop(slot)
+                        spawn_fails[slot] = 0
+                        idle.append(slot)
+                    elif w.dead:  # died while initializing
+                        booting.pop(slot)
+                        self._retire(slot)
+                        spawn_fails[slot] += 1
+                        if queue:
+                            launch(slot)
+                    continue
+                idx, _, t0 = active.pop(slot)
+                elapsed = time.monotonic() - t0
+                try:
+                    status, value = conn.recv()
+                except (EOFError, OSError):
+                    outcomes[idx] = TaskOutcome("crash", elapsed_s=elapsed,
+                                                error="worker died mid-task")
+                    self._retire(slot)
+                    if queue:
+                        launch(slot)
+                else:
+                    if status == "ok":
+                        outcomes[idx] = TaskOutcome("ok", value=value,
+                                                    elapsed_s=elapsed)
+                    else:
+                        outcomes[idx] = TaskOutcome("error", error=value,
+                                                    elapsed_s=elapsed)
+                    idle.append(slot)
+            now = time.monotonic()
+            for slot in [s for s, (_, dl, _) in active.items() if dl <= now]:
+                idx, _, t0 = active.pop(slot)
+                outcomes[idx] = TaskOutcome("timeout", elapsed_s=now - t0,
+                                            error=f"killed after "
+                                                  f"{self.timeout_s:.1f}s")
+                self._retire(slot)  # SIGKILL: a hung task cannot linger
+                if queue:
+                    launch(slot)
+            for slot in [s for s, dl in booting.items() if dl <= now]:
+                booting.pop(slot)
+                self._retire(slot)
+                spawn_fails[slot] += 1
+                if queue:
+                    launch(slot)
+            dispatch()
+        return [o if o is not None else TaskOutcome("crash", error="lost")
+                for o in outcomes]
+
+
+def _worker_warmup() -> None:
+    """SubprocessRunner worker initializer: pay the heavy imports at spawn,
+    before the worker signals ready, so a candidate's timeout budget covers
+    only its own build + measurement."""
+    import jax  # noqa: F401
+    from repro import kernels  # noqa: F401
+
+
+def _measure_candidate(payload) -> float:
+    """Pool task: build + time one candidate inside the worker process.
+
+    Runs the full :class:`InterpretRunner` path (concretize, Pallas build,
+    first run, timed repeats) so any hang anywhere in that pipeline is
+    killable by the parent.
+    """
+    from repro.core.runner import InterpretRunner
+
+    hw, workload, schedule, repeats, warmup = payload
+    runner = InterpretRunner(hw, repeats=repeats, warmup=warmup)
+    return runner.run(workload, schedule)
+
+
+@dataclasses.dataclass
+class SubprocessRunner:
+    """Runner-protocol wrapper over :class:`MeasurePool`.
+
+    Candidates are measured in persistent worker processes with a hard
+    per-candidate ``timeout_s``; a wedged or crashing build costs exactly one
+    candidate (reported ``INVALID``) and one worker respawn. ``workers=0``
+    picks ``min(cpu_count, 4)``. Call :meth:`close` (or use as a context
+    manager) to release the workers.
+    """
+
+    hw: HardwareConfig
+    repeats: int = 3
+    warmup: int = 1
+    workers: int = 0
+    timeout_s: float = 60.0
+    mp_context: str = "spawn"
+    name: str = "subprocess"
+    # See tuner.py: runners with real measurement latency opt into the
+    # pipelined (speculative) tuner loop.
+    overlap_capable = True
+    # test seam: replace the in-worker measurement task (must stay a
+    # module-level callable so spawn can import it by reference)
+    task: Callable[[Any], Any] = _measure_candidate
+
+    def __post_init__(self):
+        self._pool: MeasurePool | None = None
+
+    def _ensure_pool(self) -> MeasurePool:
+        if self._pool is None:
+            n = self.workers or min(os.cpu_count() or 1, 4)
+            # only warm up (import jax/kernels) under the real measurement
+            # task; a custom test task keeps its workers import-light
+            init = (_worker_warmup if self.task is _measure_candidate
+                    else None)
+            self._pool = MeasurePool(self.task, workers=n,
+                                     timeout_s=self.timeout_s,
+                                     mp_context=self.mp_context,
+                                     initializer=init)
+        return self._pool
+
+    @property
+    def pool_restarts(self) -> int:
+        return self._pool.restarts if self._pool is not None else 0
+
+    def run(self, workload: Workload, schedule: Schedule) -> float:
+        return self.run_batch(workload, [schedule])[0]
+
+    def run_batch(self, workload: Workload,
+                  schedules: Sequence[Schedule]) -> list[float]:
+        pool = self._ensure_pool()
+        payloads = [(self.hw, workload, s, self.repeats, self.warmup)
+                    for s in schedules]
+        out = []
+        for o in pool.run_many(payloads):
+            if o.ok and isinstance(o.value, (int, float)):
+                out.append(float(o.value))
+            else:
+                out.append(INVALID)
+        return out
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+
+    def __enter__(self) -> "SubprocessRunner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -12,7 +12,17 @@ this CPU-only container the corresponding pair is:
   utilization derating. This is the stand-in for real-TPU measurement and
   the model behind the §Roofline numbers (the QEMU analogue).
 
-Both satisfy the same ``Runner`` protocol; ``tuner.tune`` is agnostic.
+A third runner, :class:`~repro.core.measure_pool.SubprocessRunner`, wraps
+the interpret path in a persistent worker-process pool with a true
+per-candidate timeout kill — the isolation a wedged (not merely crashing)
+build needs; see ``measure_pool.py``.
+
+All satisfy the same ``Runner`` protocol; ``tuner.tune`` is agnostic. The
+``overlap_capable`` class attribute tells the tuner whether measurement on
+this runner has real latency worth hiding behind search: runners that
+declare it ``True`` opt into the pipelined (speculative) tuner loop and
+interleaved sessions, while instantaneous runners keep the exact
+synchronous search trajectory (see ``tuner.effective_pipeline_depth``).
 """
 
 from __future__ import annotations
@@ -36,6 +46,9 @@ INVALID = float("inf")
 class Runner(Protocol):
     name: str
     hw: HardwareConfig
+    # Optional (duck-typed, defaults False): True if measurement has real
+    # wall-clock latency the tuner can hide search work behind.
+    # overlap_capable: bool
 
     def run(self, workload: Workload, schedule: Schedule) -> float:
         """Latency in seconds; inf if the candidate is invalid."""
@@ -68,6 +81,8 @@ class InterpretRunner:
     # *timing* stays serial so measurements never contend for the host.
     max_workers: int = 0  # 0 -> min(cpu_count, 8)
     build_timeout_s: float = 60.0
+    # Real wall-clock measurement: the tuner may pipeline search behind it.
+    overlap_capable = True
 
     def _prepare(self, workload: Workload,
                  schedule: Schedule) -> Callable | None:
@@ -107,12 +122,14 @@ class InterpretRunner:
         """Build the batch concurrently, then time survivors serially.
 
         A *crashing* build costs only its own slot. A *hung* build cannot be
-        killed from a thread (process-pool isolation is a ROADMAP follow-on):
-        it forfeits itself plus whatever its held worker slot starves once
-        the batch deadline — ``build_timeout_s`` per concurrency wave, not
-        per candidate, so stalls never accumulate unboundedly — expires.
-        Workers are daemon threads, so a wedged build can never block
-        interpreter exit either.
+        killed from a thread: it forfeits itself plus whatever its held
+        worker slot starves once the batch deadline — ``build_timeout_s``
+        per concurrency wave, not per candidate, so stalls never accumulate
+        unboundedly — expires. Workers are daemon threads, so a wedged build
+        can never block interpreter exit either. When wedged builds are a
+        real risk, use :class:`~repro.core.measure_pool.SubprocessRunner`
+        instead: its process-pool workers give a true per-candidate timeout
+        *kill* (the slot is reclaimed immediately, not abandoned).
         """
         schedules = list(schedules)
         if len(schedules) <= 1:
@@ -150,6 +167,10 @@ class AnalyticRunner:
 
     hw: HardwareConfig
     name: str = "analytic"
+    # Instantaneous measurement: nothing for the tuner pipeline to hide
+    # behind, so speculative search would only degrade quality (tuner.py
+    # clamps the pipeline depth to 1 for this runner).
+    overlap_capable = False
 
     def run(self, workload: Workload, schedule: Schedule) -> float:
         params = space_lib.concretize(workload, self.hw, schedule)

@@ -14,8 +14,21 @@ across runs. A :class:`TuningSession` closes that gap:
 - **shared budget** — a single trial budget is split across the unique
   workloads, weighted by their contribution to model latency
   (``count * flops``), with a per-workload floor;
+- **overlap** — on runners with real measurement latency (``overlap_capable``,
+  e.g. the interpret or subprocess runners) the session drives all workloads'
+  :class:`~repro.core.tuner.TuneDriver` state machines against one FIFO
+  measurement queue, so one workload's candidates are evolved while
+  another's batch is on the "board". ``pipeline_depth`` additionally lets a
+  single driver keep several batches in flight (speculative evolution
+  against predicted latencies — see ``tuner.py``). Interleaving stays
+  deterministic (reconciliation points are algorithmic, not timed), but
+  trades away *within-session* warm-start chaining: every workload's
+  transfer seeds are drawn from the database as it stood when the session
+  began. Instantaneous runners (the analytic model) keep the serial path
+  and its chaining.
 - **reporting** — per-workload progress lines plus a session-level
-  latency/speedup summary that is committed to the database.
+  latency/speedup summary (including measure/search overlap) committed to
+  the database.
 """
 
 from __future__ import annotations
@@ -30,6 +43,7 @@ from repro.core.database import TuningDatabase
 from repro.core.hardware import HardwareConfig
 from repro.core.runner import Runner
 from repro.core.schedule import Schedule
+from repro.core.tuner import TuneResult
 from repro.core.workload import Workload
 
 ModelConfig = Sequence[tuple[int, Workload]]
@@ -66,6 +80,16 @@ class SessionResult:
     reports: list[WorkloadReport]
     total_trials: int
     wall_time_s: float
+    interleaved: bool = False
+    pipeline_depth: int = 1
+    measure_time_s: float = 0.0  # total runner measurement time
+    overlap_s: float = 0.0  # measurement time hidden behind search
+
+    @property
+    def overlap_fraction(self) -> float:
+        if self.measure_time_s <= 0:
+            return 0.0
+        return self.overlap_s / self.measure_time_s
 
     @property
     def tuned_latency(self) -> float:
@@ -92,6 +116,11 @@ class SessionResult:
             "tuned_latency_s": self.tuned_latency,
             "fixed_latency_s": self.fixed_latency,
             "speedup_vs_fixed": self.speedup_vs_fixed,
+            "interleaved": self.interleaved,
+            "pipeline_depth": self.pipeline_depth,
+            "measure_time_s": self.measure_time_s,
+            "overlap_s": self.overlap_s,
+            "overlap_fraction": self.overlap_fraction,
             "workloads": [{
                 "key": r.workload.key(),
                 "count": r.count,
@@ -150,7 +179,13 @@ def split_budget(weights: Sequence[float], total: int,
 @dataclasses.dataclass
 class TuningSession:
     """Tune every unique workload of a model under one shared trial budget,
-    warm-starting from (and committing back to) the tuning database."""
+    warm-starting from (and committing back to) the tuning database.
+
+    ``interleave=None`` (auto) overlaps measurement and search across
+    workloads whenever the runner declares ``overlap_capable``; set it
+    explicitly to force either path. ``pipeline_depth`` is the per-workload
+    in-flight batch bound (see ``tuner.tune``).
+    """
 
     hw: HardwareConfig
     runner: Runner
@@ -158,53 +193,108 @@ class TuningSession:
     warm_start_limit: int = 4
     min_trials: int = 4
     batch: int = 8
+    pipeline_depth: int = 1
+    interleave: bool | None = None
     log: Callable[[str], None] | None = None
 
     def _log(self, msg: str) -> None:
         if self.log:
             self.log(msg)
 
-    def tune_model(self, ops: ModelConfig, total_trials: int = 256,
-                   seed: int = 0) -> SessionResult:
+    def _seeds_for(self, wl: Workload) -> list[Schedule]:
+        if self.database is None:
+            return []
+        return self.database.transfer_candidates(wl, self.hw.name,
+                                                 limit=self.warm_start_limit)
+
+    def _report_for(self, index: int, n_unique: int, count: int,
+                    wl: Workload, res: TuneResult) -> WorkloadReport:
         from repro.core.dispatch import fixed_library_schedule
 
+        fixed = self.runner.run(wl, fixed_library_schedule(wl, self.hw))
+        if not math.isfinite(fixed):  # library has no valid mapping here
+            fixed = res.best_latency
+        self._log(f"  [{index + 1}/{n_unique}] {wl.key()} x{count}: "
+                  f"best {res.best_latency * 1e6:9.2f} us over "
+                  f"{res.trials} trials"
+                  f" (warm-start {res.warm_started})"
+                  f", library {fixed * 1e6:9.2f} us")
+        return WorkloadReport(
+            workload=wl, count=count, trials=res.trials,
+            best_latency=res.best_latency, best_schedule=res.best_schedule,
+            warm_started=res.warm_started, fixed_latency=fixed,
+            wall_time_s=res.wall_time_s)
+
+    # ---- execution paths -------------------------------------------------------
+    def _tune_serial(self, unique, budgets,
+                     seed) -> tuple[list[TuneResult], float]:
+        """One workload at a time; workload i+1's warm-start query sees the
+        records workload i just committed (within-session chaining).
+        Returns the per-workload results and the summed overlap seconds."""
+        results = []
+        for i, ((count, wl), trials) in enumerate(zip(unique, budgets)):
+            results.append(tuner.tune(
+                wl, self.hw, self.runner, trials=trials, seed=seed + i,
+                database=self.database, batch=self.batch,
+                warm_start=self._seeds_for(wl),
+                pipeline_depth=self.pipeline_depth))
+        return results, sum(r.overlap_s for r in results)
+
+    def _tune_interleaved(self, unique, budgets, seed,
+                          depth) -> tuple[list[TuneResult], float]:
+        """All drivers share one FIFO measurement thread (one board): while
+        workload A's batch measures, workloads B, C, ... evolve and enqueue.
+        Submission and reconciliation order are fixed by the round-robin
+        schedule, so the result is deterministic for a given seed."""
+        drivers = [
+            tuner.TuneDriver(wl, self.hw, self.runner, trials=trials,
+                             seed=seed + i, database=self.database,
+                             batch=self.batch, warm_start=self._seeds_for(wl))
+            for i, ((count, wl), trials) in enumerate(zip(unique, budgets))]
+        tuner.run_pipelined(drivers, self.runner, depth)
+        # Session-level overlap from totals: the single measurement thread
+        # serializes batches, so a wait attributed to one driver can cover
+        # another driver's measurement — per-driver numbers would overcount.
+        measure_s = sum(d.measure_time_s for d in drivers)
+        wait_s = sum(d.wait_time_s for d in drivers)
+        results = [d.finish(pipeline_depth=depth) for d in drivers]
+        return results, max(0.0, measure_s - wait_s)
+
+    def tune_model(self, ops: ModelConfig, total_trials: int = 256,
+                   seed: int = 0) -> SessionResult:
         t_start = time.perf_counter()
         ops = list(ops)
         unique = dedup_workloads(ops)
         weights = [count * wl.flops() for count, wl in unique]
         budgets = split_budget(weights, total_trials, floor=self.min_trials)
+        interleave = (self.interleave if self.interleave is not None
+                      else getattr(self.runner, "overlap_capable", False)
+                      and len(unique) > 1)
+        # Same clamp tune() applies: speculation depth > 1 only makes sense
+        # against a runner with real measurement latency.
+        depth = tuner.effective_pipeline_depth(self.runner,
+                                               max(1, self.pipeline_depth))
         self._log(f"session: {len(ops)} ops -> {len(unique)} unique "
                   f"workloads, {sum(budgets)} trials on {self.runner.name}"
-                  f"/{self.hw.name}")
+                  f"/{self.hw.name}"
+                  + (f" (interleaved, depth {depth})" if interleave else ""))
 
-        reports: list[WorkloadReport] = []
-        for i, ((count, wl), trials) in enumerate(zip(unique, budgets)):
-            seeds: list[Schedule] = []
-            if self.database is not None:
-                seeds = self.database.transfer_candidates(
-                    wl, self.hw.name, limit=self.warm_start_limit)
-            res = tuner.tune(wl, self.hw, self.runner, trials=trials,
-                             seed=seed + i, database=self.database,
-                             batch=self.batch, warm_start=seeds)
-            fixed = self.runner.run(wl, fixed_library_schedule(wl, self.hw))
-            if not math.isfinite(fixed):  # library has no valid mapping here
-                fixed = res.best_latency
-            reports.append(WorkloadReport(
-                workload=wl, count=count, trials=res.trials,
-                best_latency=res.best_latency,
-                best_schedule=res.best_schedule,
-                warm_started=res.warm_started, fixed_latency=fixed,
-                wall_time_s=res.wall_time_s))
-            self._log(f"  [{i + 1}/{len(unique)}] {wl.key()} x{count}: "
-                      f"best {res.best_latency * 1e6:9.2f} us over "
-                      f"{res.trials} trials"
-                      f" (warm-start {res.warm_started})"
-                      f", library {fixed * 1e6:9.2f} us")
+        if interleave:
+            results, overlap_s = self._tune_interleaved(unique, budgets,
+                                                        seed, depth)
+        else:
+            results, overlap_s = self._tune_serial(unique, budgets, seed)
+        reports = [self._report_for(i, len(unique), count, wl, res)
+                   for i, ((count, wl), res) in enumerate(zip(unique,
+                                                              results))]
 
+        measure_s = sum(r.measure_time_s for r in results)
         result = SessionResult(
             hw=self.hw, runner_name=self.runner.name, reports=reports,
             total_trials=sum(r.trials for r in reports),
-            wall_time_s=time.perf_counter() - t_start)
+            wall_time_s=time.perf_counter() - t_start,
+            interleaved=interleave, pipeline_depth=depth,
+            measure_time_s=measure_s, overlap_s=overlap_s)
         if self.database is not None:
             self.database.add_session(result.summary())
             if self.database.path:
@@ -212,5 +302,7 @@ class TuningSession:
         self._log(f"session: tuned {result.tuned_latency * 1e6:.1f} us vs "
                   f"library {result.fixed_latency * 1e6:.1f} us "
                   f"({result.speedup_vs_fixed:.2f}x) in "
-                  f"{result.wall_time_s:.1f}s")
+                  f"{result.wall_time_s:.1f}s"
+                  + (f", overlap {result.overlap_fraction:.0%}"
+                     if result.measure_time_s > 0 and interleave else ""))
         return result

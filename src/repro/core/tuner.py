@@ -11,12 +11,39 @@ A search can be *warm-started* from schedules recorded in a previous run
 (same workload, or a near-miss shape/hardware — the paper's Fig. 4 transfer
 experiment): they are measured first and seed both the cost model and the
 evolutionary population.
+
+Measure/search pipelining
+-------------------------
+On real hardware, measurement — not search — dominates tuning wall-time
+(9-12 s per candidate on the paper's FPGA targets). ``tune`` therefore
+supports an asynchronous producer/consumer pipeline (``pipeline_depth > 1``):
+generation N is submitted to the runner as a future and generation N+1 is
+evolved immediately against the cost model's *predicted* latencies for the
+in-flight candidates (a constant-liar strategy), reconciling when the
+measurements land.
+
+The pipeline is **deterministic by construction**: speculation and
+reconciliation points are fixed by the algorithm (the head batch is awaited
+exactly when the pipeline is full), never by wall-clock timing, so a given
+seed replays the same history in the same submission order regardless of how
+slow the runner is. Runners that measure instantaneously (the analytic
+model) declare ``overlap_capable = False``; for them the effective depth is
+clamped to 1 — there is no latency to hide, and the pipelined path then
+reproduces the synchronous trajectory bit-identically.
+
+The mechanics live in :class:`TuneDriver`, an explicit propose/reconcile
+state machine; :class:`~repro.core.session.TuningSession` drives several
+drivers against one measurement queue to interleave one workload's
+measurement with another's evolution.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Sequence
 
 from repro.core import space as space_lib
@@ -24,7 +51,7 @@ from repro.core.cost_model import RidgeCostModel, features
 from repro.core.database import TuningDatabase
 from repro.core.evolution import EvolutionarySearch
 from repro.core.hardware import HardwareConfig
-from repro.core.runner import Runner, run_batch as _run_batch
+from repro.core.runner import INVALID, Runner, run_batch as _run_batch
 from repro.core.sampler import TraceSampler
 from repro.core.schedule import Schedule
 from repro.core.workload import Workload
@@ -40,6 +67,17 @@ class TuneResult:
     trials: int
     wall_time_s: float
     warm_started: int = 0  # warm-start candidates actually measured
+    pipeline_depth: int = 1  # effective depth the search ran at
+    measure_time_s: float = 0.0  # total time the runner spent measuring
+    overlap_s: float = 0.0  # measurement time hidden behind search work
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of measurement time overlapped with search (0 = fully
+        synchronous, toward 1 = measurement fully hidden)."""
+        if self.measure_time_s <= 0:
+            return 0.0
+        return self.overlap_s / self.measure_time_s
 
     @property
     def best_params(self):
@@ -48,86 +86,277 @@ class TuneResult:
         return space_lib.concretize(self.workload, self.hw, self.best_schedule)
 
 
+def effective_pipeline_depth(runner: Runner, requested: int) -> int:
+    """Clamp the pipeline depth for runners with nothing to overlap.
+
+    A runner that measures instantaneously and deterministically (e.g. the
+    analytic model) gains nothing from speculating against predicted
+    latencies — it only degrades search quality — so unless it declares
+    ``overlap_capable = True`` the depth is clamped to 1, which keeps the
+    pipelined execution bit-identical to the synchronous trajectory.
+    """
+    if requested <= 1:
+        return 1
+    return requested if getattr(runner, "overlap_capable", False) else 1
+
+
+class TuneDriver:
+    """Single-workload tuning as an explicit propose/reconcile state machine.
+
+    The synchronous loop is ``while (b := driver.propose()) is not None:
+    driver.reconcile(b, run_batch(runner, workload, b))``. A pipelined
+    executor may hold several proposed batches in flight; ``propose`` then
+    speculates using the cost model's predicted latencies for the in-flight
+    candidates and ``reconcile`` must be called in submission order (history
+    order is the database's replay order and stays deterministic).
+
+    ``propose() is None`` means "no further batch given current knowledge":
+    final only once nothing is in flight — with batches outstanding the
+    caller should reconcile and ask again.
+    """
+
+    def __init__(self, workload: Workload, hw: HardwareConfig, runner: Runner,
+                 trials: int = 64, seed: int = 0,
+                 database: TuningDatabase | None = None,
+                 warmup_fraction: float = 0.25, batch: int = 4,
+                 warm_start: Sequence[Schedule] = (),
+                 log: Callable[[str], None] | None = None):
+        self.workload, self.hw, self.runner = workload, hw, runner
+        self.trials = trials
+        self.batch = batch
+        self.database = database
+        self.log = log
+        # wall-time span of this driver's own activity: first propose() to
+        # last reconcile() — in an interleaved session drivers are all
+        # constructed up front, so construction time would over-attribute
+        self.t_start = time.perf_counter()
+        self._t_last: float | None = None
+        self._started = False
+        self.space = space_lib.space_for(workload, hw)
+        self.sampler = TraceSampler(seed)
+        self.cost_model = RidgeCostModel()
+        self.search = EvolutionarySearch(workload, hw, self.space,
+                                         self.sampler)
+        self.measured: dict[tuple, float] = {}
+        self.history: list[tuple[Schedule, float]] = []
+        self.best_schedule: Schedule | None = None
+        self.best_latency = INVALID
+        self.warm_started = 0
+        # pipeline bookkeeping (written by the executor wrappers below)
+        self.measure_time_s = 0.0  # runner time, accumulated off-thread
+        self.wait_time_s = 0.0  # main-thread time blocked on futures
+        # Seeds take at most half the budget so even floor-budget workloads
+        # always perform some fresh search instead of only replaying records.
+        # Schedules from foreign spaces may not concretize here; skipped free.
+        self._warm = [s for s in warm_start
+                      if space_lib.concretize(workload, hw, s).valid]
+        self._warm = self._warm[: trials // 2]
+        self._in_flight: deque[Schedule] = deque()
+        self._in_flight_sigs: set[tuple] = set()
+        self._submitted = 0  # == len(history) + len(_in_flight)
+        self._n_warmup = max(4, int(trials * warmup_fraction))
+        self._tries = 0  # phase-1 sampling attempts (bounded)
+        self._phase = 0
+        self._population_seeded = False
+
+    # ---- proposal --------------------------------------------------------------
+    def _take(self, schedules: Sequence[Schedule]) -> list[Schedule]:
+        """Drop already-measured / in-flight / within-batch duplicate
+        candidates, mark the rest in flight, and return them."""
+        todo: list[Schedule] = []
+        seen: set[tuple] = set()
+        for s in schedules:
+            sig = s.signature()
+            if sig in self.measured or sig in self._in_flight_sigs \
+                    or sig in seen:
+                continue
+            seen.add(sig)
+            todo.append(s)
+        for s in todo:
+            self._in_flight.append(s)
+            self._in_flight_sigs.add(s.signature())
+        self._submitted += len(todo)
+        return todo
+
+    def _elites(self) -> list[Schedule]:
+        """Top-4 schedules by latency — measured, plus (when speculating)
+        in-flight candidates at their predicted latency. An unfitted model
+        predicts exp(0) = 1 s, which keeps speculative candidates out of the
+        elite set until there is evidence for them."""
+        ranked = list(self.history)
+        for s in self._in_flight:
+            params = space_lib.concretize(self.workload, self.hw, s)
+            if params.valid:
+                # predict() is log-latency; cap before exp so a wild early
+                # extrapolation can't overflow (it only needs to rank)
+                pred = math.exp(min(self.cost_model.predict(
+                    features(self.workload, self.hw, params)), 700.0))
+            else:
+                pred = INVALID
+            ranked.append((s, pred))
+        return [s for s, l in sorted(ranked, key=lambda r: r[1])[:4]
+                if l != INVALID]
+
+    def propose(self) -> list[Schedule] | None:
+        if not self._started:
+            self._started = True
+            self.t_start = time.perf_counter()
+        # Phase 0 — warm start from prior records (database transfer).
+        if self._phase == 0:
+            self._phase = 1
+            todo = self._take(self._warm)
+            if todo:
+                self.warm_started = len(todo)
+                return todo
+        # Phase 1 — probabilistic sampling warm-up.
+        if self._phase == 1:
+            target = min(self._n_warmup, self.trials)
+            while self._submitted < target and self._tries < 50 * self.trials:
+                pending: list[Schedule] = []
+                want = min(self.batch, target - self._submitted)
+                while len(pending) < want and self._tries < 50 * self.trials:
+                    self._tries += 1
+                    s = self.sampler.sample(self.space)
+                    if space_lib.concretize(self.workload, self.hw, s).valid:
+                        pending.append(s)
+                todo = self._take(pending)
+                if todo:
+                    return todo
+            self._phase = 2
+        # Phase 2 — evolutionary search guided by the cost model.
+        if not self._population_seeded:
+            self.search.seed_population(
+                [s for s, _ in self.history] + list(self._in_flight))
+            self._population_seeded = True
+        if self._submitted >= self.trials:
+            return None
+        self.search.evolve(self.cost_model, self._elites())
+        proposals = self.search.propose(
+            min(self.batch, self.trials - self._submitted),
+            exclude=set(self.measured) | self._in_flight_sigs)
+        todo = self._take(proposals)
+        return todo or None
+
+    # ---- reconciliation --------------------------------------------------------
+    def reconcile(self, schedules: Sequence[Schedule],
+                  latencies: Sequence[float]) -> None:
+        """Fold one measured batch back in. Batches must arrive in the order
+        they were proposed (FIFO) so history replays deterministically."""
+        for s, latency in zip(schedules, latencies):
+            head = self._in_flight.popleft()
+            if head.signature() != s.signature():
+                raise RuntimeError("reconcile out of submission order")
+            self._in_flight_sigs.discard(s.signature())
+            self._record(s, latency)
+        self._t_last = time.perf_counter()
+
+    def _record(self, s: Schedule, latency: float) -> None:
+        self.measured[s.signature()] = latency
+        self.history.append((s, latency))
+        params = space_lib.concretize(self.workload, self.hw, s)
+        if params.valid and math.isfinite(latency):
+            self.cost_model.update(features(self.workload, self.hw, params),
+                                   latency)
+            if self.database is not None:
+                self.database.add(self.workload, self.hw.name, s, latency,
+                                  self.runner.name)
+            if latency < self.best_latency:
+                self.best_schedule, self.best_latency = s, latency
+                if self.log:
+                    self.log(f"  trial {len(self.history):3d}: "
+                             f"{latency*1e6:10.1f} us  "
+                             f"<- new best {s.as_dict()}")
+
+    # ---- completion ------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return not self._in_flight
+
+    def finish(self, pipeline_depth: int = 1) -> TuneResult:
+        if self._in_flight:
+            raise RuntimeError("finish() with batches still in flight")
+        return TuneResult(
+            self.workload, self.hw, self.best_schedule, self.best_latency,
+            self.history, len(self.history),
+            (self._t_last or time.perf_counter()) - self.t_start,
+            warm_started=self.warm_started, pipeline_depth=pipeline_depth,
+            measure_time_s=self.measure_time_s,
+            overlap_s=max(0.0, self.measure_time_s - self.wait_time_s))
+
+
+def timed_run_batch(runner: Runner, driver: TuneDriver,
+                    schedules: Sequence[Schedule]) -> list[float]:
+    """Measure one batch, charging its runner time to the driver (runs on
+    the measurement thread; the single-writer pattern keeps it race-free)."""
+    t0 = time.perf_counter()
+    try:
+        return _run_batch(runner, driver.workload, schedules)
+    finally:
+        driver.measure_time_s += time.perf_counter() - t0
+
+
+def run_pipelined(drivers: Sequence[TuneDriver], runner: Runner,
+                  depth: int) -> None:
+    """Producer/consumer loop shared by ``tune`` (one driver) and
+    interleaved sessions (one driver per workload): all drivers feed a
+    single FIFO measurement thread (one board), each holding up to
+    ``depth`` batches in flight, reconciled in submission order. The
+    round-robin fill order is fixed, so the schedule — and every driver's
+    history — is deterministic for a given seed."""
+    counts = [0] * len(drivers)
+    with ThreadPoolExecutor(max_workers=1,
+                            thread_name_prefix="measure") as ex:
+        pending: deque = deque()  # (driver index, batch, future)
+        while True:
+            submitted = False
+            for i, driver in enumerate(drivers):
+                while counts[i] < depth:
+                    batch = driver.propose()
+                    if batch is None:
+                        break
+                    pending.append((i, batch, ex.submit(
+                        timed_run_batch, runner, driver, batch)))
+                    counts[i] += 1
+                    submitted = True
+            if pending:
+                i, batch, fut = pending.popleft()
+                t0 = time.perf_counter()
+                latencies = fut.result()
+                drivers[i].wait_time_s += time.perf_counter() - t0
+                drivers[i].reconcile(batch, latencies)
+                counts[i] -= 1
+            elif not submitted:
+                break
+
+
 def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
          trials: int = 64, seed: int = 0,
          database: TuningDatabase | None = None,
          warmup_fraction: float = 0.25,
          batch: int = 4,
          warm_start: Sequence[Schedule] = (),
-         log: Callable[[str], None] | None = None) -> TuneResult:
-    t_start = time.perf_counter()
-    space = space_lib.space_for(workload, hw)
-    sampler = TraceSampler(seed)
-    cost_model = RidgeCostModel()
-    search = EvolutionarySearch(workload, hw, space, sampler)
-
-    measured: dict[tuple, float] = {}
-    history: list[tuple[Schedule, float]] = []
-    best_s: Schedule | None = None
-    best_l = float("inf")
-
-    def record(s: Schedule, latency: float) -> None:
-        nonlocal best_s, best_l
-        measured[s.signature()] = latency
-        history.append((s, latency))
-        params = space_lib.concretize(workload, hw, s)
-        if params.valid and latency != float("inf"):
-            cost_model.update(features(workload, hw, params), latency)
-            if database is not None:
-                database.add(workload, hw.name, s, latency, runner.name)
-            if latency < best_l:
-                best_s, best_l = s, latency
-                if log:
-                    log(f"  trial {len(history):3d}: {latency*1e6:10.1f} us  "
-                        f"<- new best {s.as_dict()}")
-
-    def measure_batch(schedules: Sequence[Schedule]) -> int:
-        """Measure unseen candidates as one runner batch; returns how many."""
-        todo, seen = [], set()
-        for s in schedules:
-            sig = s.signature()
-            if sig in measured or sig in seen:
-                continue
-            seen.add(sig)
-            todo.append(s)
-        for s, latency in zip(todo, _run_batch(runner, workload, todo)):
-            record(s, latency)
-        return len(todo)
-
-    # Phase 0 — warm start from prior records (database transfer). Schedules
-    # from foreign spaces may not concretize here; they are skipped for free.
-    # Seeds take at most half the budget so even floor-budget workloads
-    # always perform some fresh search instead of only replaying records.
-    seeds = [s for s in warm_start
-             if space_lib.concretize(workload, hw, s).valid]
-    n_warm = measure_batch(seeds[:trials // 2])
-
-    # Phase 1 — probabilistic sampling warm-up.
-    n_warmup = max(4, int(trials * warmup_fraction))
-    tries = 0
-    while len(history) < min(n_warmup, trials) and tries < 50 * trials:
-        pending: list[Schedule] = []
-        want = min(batch, min(n_warmup, trials) - len(history))
-        while len(pending) < want and tries < 50 * trials:
-            tries += 1
-            s = sampler.sample(space)
-            if space_lib.concretize(workload, hw, s).valid:
-                pending.append(s)
-        measure_batch(pending)
-
-    # Phase 2 — evolutionary search guided by the cost model.
-    search.seed_population([s for s, _ in history])
-    while len(history) < trials:
-        elites = [s for s, l in sorted(history, key=lambda r: r[1])[:4]
-                  if l != float("inf")]
-        search.evolve(cost_model, elites)
-        proposals = search.propose(min(batch, trials - len(history)),
-                                   exclude=set(measured))
-        if not proposals:
-            break
-        measure_batch(proposals)
-
+         log: Callable[[str], None] | None = None,
+         pipeline_depth: int = 1) -> TuneResult:
+    """Tune one workload. ``pipeline_depth`` bounds how many proposed batches
+    may be in flight at once (1 = fully synchronous; see module docstring for
+    the determinism guarantees of the pipelined mode)."""
+    driver = TuneDriver(workload, hw, runner, trials=trials, seed=seed,
+                        database=database, warmup_fraction=warmup_fraction,
+                        batch=batch, warm_start=warm_start, log=log)
+    depth = effective_pipeline_depth(runner, pipeline_depth)
+    if pipeline_depth <= 1:
+        while (batch_s := driver.propose()) is not None:
+            latencies = timed_run_batch(runner, driver, batch_s)
+            driver.reconcile(batch_s, latencies)
+        driver.wait_time_s = driver.measure_time_s  # nothing overlapped
+    else:
+        # Even when clamped to depth 1, run through the executor so the
+        # asynchronous plumbing is exercised (and verified bit-identical).
+        run_pipelined([driver], runner, depth)
+        if depth == 1:
+            # at depth 1 nothing can overlap; don't let scheduling jitter
+            # between submit and result() report as spurious overlap
+            driver.wait_time_s = driver.measure_time_s
     if database is not None and database.path:
         database.save()
-    return TuneResult(workload, hw, best_s, best_l, history, len(history),
-                      time.perf_counter() - t_start, warm_started=n_warm)
+    return driver.finish(pipeline_depth=depth)

@@ -1,0 +1,53 @@
+"""Picklable task functions for MeasurePool tests.
+
+``spawn`` workers pickle tasks by reference and re-import this module by
+name, so everything here must live at module level and the module must stay
+dependency-free and fast to import (no jax, no repro.kernels).
+"""
+
+import os
+import time
+
+
+def echo(x):
+    return x
+
+
+def double(x):
+    return 2 * x
+
+
+def sleepy(seconds):
+    """Stand-in for a wedged Pallas build: sleeps (hangs) for ``seconds``."""
+    time.sleep(seconds)
+    return seconds
+
+
+def boom(msg):
+    raise RuntimeError(msg)
+
+
+def die(_):
+    """Stand-in for a build that takes its worker process down."""
+    os._exit(3)
+
+
+def worker_pid(_):
+    return os.getpid()
+
+
+def pid_after_sleep(seconds):
+    time.sleep(seconds)
+    return os.getpid()
+
+
+def slow_init():
+    """Initializer slower than the task timeout (stand-in for jax import)."""
+    time.sleep(2.0)
+
+
+def hang_measure(payload):
+    """SubprocessRunner task seam: every 'candidate' wedges forever."""
+    del payload
+    time.sleep(3600.0)
+    return 0.0

@@ -1,0 +1,28 @@
+"""Shared test runners for the tuner/session suites."""
+
+import time
+
+from repro.core import AnalyticRunner
+
+
+class SlowAnalytic:
+    """Deterministic analytic latencies behind an artificial measurement
+    delay — the container-scale stand-in for a board that takes seconds per
+    batch. ``overlap_capable`` so the tuner pipeline and sessions treat it
+    like real hardware."""
+
+    overlap_capable = True
+
+    def __init__(self, hw, delay_s=0.01):
+        self.hw = hw
+        self.delay_s = delay_s
+        self.name = "slow-analytic"
+        self._inner = AnalyticRunner(hw)
+
+    def run(self, workload, schedule):
+        time.sleep(self.delay_s)
+        return self._inner.run(workload, schedule)
+
+    def run_batch(self, workload, schedules):
+        time.sleep(self.delay_s)
+        return self._inner.run_batch(workload, schedules)

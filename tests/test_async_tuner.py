@@ -1,0 +1,97 @@
+"""Pipelined (async) tuner loop: bit-identical degradation to the
+synchronous path, timing-independent deterministic replay while
+speculating, and real measure/search overlap."""
+
+import math
+
+import pytest
+
+from repro.core import (AnalyticRunner, InterpretRunner, TuningDatabase,
+                        INTERPRET, V5E, fixed_library_schedule, tune)
+from repro.core import workload as W
+
+from _test_runners import SlowAnalytic as _SlowAnalytic
+
+
+def test_async_tune_bit_identical_to_sync_on_analytic():
+    """Acceptance: the pipelined executor on an instantaneous runner clamps
+    to depth 1 and must reproduce the synchronous trajectory exactly —
+    same history, same order, same best — for a fixed seed."""
+    wl = W.matmul(256, 1024, 512, "bfloat16")
+    sync = tune(wl, V5E, AnalyticRunner(V5E), trials=24, seed=7)
+    piped = tune(wl, V5E, AnalyticRunner(V5E), trials=24, seed=7,
+                 pipeline_depth=4)
+    assert piped.pipeline_depth == 1  # clamped: nothing to overlap
+    assert piped.best_schedule == sync.best_schedule
+    assert piped.best_latency == sync.best_latency
+    assert piped.history == sync.history  # bit-identical, order included
+    assert piped.overlap_s == 0.0
+
+
+def test_async_tune_writes_same_database_records(tmp_path):
+    db_sync = TuningDatabase(str(tmp_path / "sync.json"))
+    db_async = TuningDatabase(str(tmp_path / "async.json"))
+    wl = W.vmacc(256, 512)
+    tune(wl, V5E, AnalyticRunner(V5E), trials=12, seed=0, database=db_sync)
+    tune(wl, V5E, AnalyticRunner(V5E), trials=12, seed=0, database=db_async,
+         pipeline_depth=3)
+    assert db_sync.history(wl, V5E.name) == db_async.history(wl, V5E.name)
+
+
+def test_speculative_pipeline_replays_deterministically():
+    """Depth > 1 on a slow runner speculates against predicted latencies;
+    reconciliation points are algorithmic, not timed, so two runs replay
+    the identical history regardless of wall-clock jitter."""
+    wl = W.matmul(512, 512, 512, "bfloat16")
+    r1 = tune(wl, V5E, _SlowAnalytic(V5E, 0.01), trials=16, seed=3,
+              pipeline_depth=3)
+    r2 = tune(wl, V5E, _SlowAnalytic(V5E, 0.01), trials=16, seed=3,
+              pipeline_depth=3)
+    assert r1.pipeline_depth == 3
+    assert r1.history == r2.history
+    assert r1.best_schedule == r2.best_schedule
+    assert r1.trials == 16
+
+
+def test_speculative_pipeline_overlaps_and_stays_competitive():
+    wl = W.matmul(512, 2048, 2048, "bfloat16")
+    runner = _SlowAnalytic(V5E, 0.02)
+    res = tune(wl, V5E, runner, trials=24, seed=0, pipeline_depth=3)
+    # measurement time was really spent, and some of it was hidden behind
+    # the evolution of the next generation
+    assert res.measure_time_s > 0
+    assert res.overlap_s > 0
+    assert 0 < res.overlap_fraction <= 1
+    # speculation must not wreck search quality: still beats the library
+    fixed = AnalyticRunner(V5E).run(wl, fixed_library_schedule(wl, V5E))
+    assert res.best_latency <= fixed
+    assert math.isfinite(res.best_latency)
+
+
+def test_sync_tune_reports_zero_overlap():
+    wl = W.matmul(256, 256, 256, "bfloat16")
+    res = tune(wl, V5E, AnalyticRunner(V5E), trials=12, seed=0)
+    assert res.pipeline_depth == 1
+    assert res.overlap_s == 0.0 and res.overlap_fraction == 0.0
+    assert res.measure_time_s > 0
+
+
+def test_warm_start_measured_first_in_pipelined_mode():
+    wl = W.matmul(256, 512, 512, "bfloat16")
+    seed_schedule = fixed_library_schedule(wl, V5E)
+    res = tune(wl, V5E, _SlowAnalytic(V5E, 0.005), trials=8, seed=0,
+               warm_start=[seed_schedule], pipeline_depth=2)
+    assert res.warm_started == 1
+    assert res.trials == 8
+    assert res.history[0][0] == seed_schedule  # submission order preserved
+
+
+@pytest.mark.slow
+def test_async_tune_interpret_overlap_end_to_end():
+    """Real Pallas builds: the pipelined loop hides part of the measurement
+    wall-time behind candidate evolution."""
+    wl = W.matmul(8, 8, 8, "float32")
+    runner = InterpretRunner(INTERPRET, repeats=1, warmup=0)
+    res = tune(wl, INTERPRET, runner, trials=8, seed=0, pipeline_depth=2)
+    assert math.isfinite(res.best_latency) and res.best_latency > 0
+    assert res.overlap_fraction > 0

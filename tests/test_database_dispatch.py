@@ -1,0 +1,139 @@
+"""Database bugfixes (env re-resolution, atomic save, strict JSON, inf
+rejection) and the serving-path dispatch cache with invalidation."""
+
+import json
+import os
+
+import pytest
+
+from repro.core import (Schedule, TuningDatabase, V5E, best_schedule,
+                        fixed_library_schedule)
+from repro.core import workload as W
+from repro.core.database import global_database, reset_global_database
+
+
+@pytest.fixture
+def fresh_global():
+    reset_global_database()
+    yield
+    reset_global_database()
+
+
+def _make_db_file(path, wl, variant, latency):
+    db = TuningDatabase(str(path))
+    db.add(wl, V5E.name, Schedule.fixed(variant=variant), latency, "analytic")
+    db.save()
+
+
+# ------------------------------------------------------- global database ----
+
+def test_global_database_reresolves_env_var(tmp_path, monkeypatch,
+                                            fresh_global):
+    """Repointing REPRO_TUNING_DB at a new tuned artifact must take effect
+    in a live process — the first-seen value is no longer pinned."""
+    wl = W.matmul(64, 64, 64)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    _make_db_file(p1, wl, "from_a", 1e-3)
+    _make_db_file(p2, wl, "from_b", 2e-3)
+
+    monkeypatch.setenv("REPRO_TUNING_DB", str(p1))
+    db1 = global_database()
+    assert db1.path == str(p1)
+    assert db1.best(wl, V5E.name)[0]["variant"] == "from_a"
+    assert global_database() is db1  # same path -> cached instance
+
+    monkeypatch.setenv("REPRO_TUNING_DB", str(p2))
+    db2 = global_database()
+    assert db2.path == str(p2)
+    assert db2.best(wl, V5E.name)[0]["variant"] == "from_b"
+
+
+def test_reset_global_database_rereads_disk(tmp_path, monkeypatch,
+                                            fresh_global):
+    wl = W.matmul(32, 32, 32)
+    p = tmp_path / "db.json"
+    _make_db_file(p, wl, "v1", 1e-3)
+    monkeypatch.setenv("REPRO_TUNING_DB", str(p))
+    assert global_database().best(wl, V5E.name)[0]["variant"] == "v1"
+    # another process ships a better artifact to the same path
+    _make_db_file(p, wl, "v2", 5e-4)
+    reset_global_database()
+    assert global_database().best(wl, V5E.name)[0]["variant"] == "v2"
+
+
+# ----------------------------------------------------------- persistence ----
+
+def test_add_rejects_nonfinite_latency():
+    db = TuningDatabase()
+    wl = W.vmacc(8, 8)
+    db.add(wl, "hw", Schedule.fixed(variant="a"), float("inf"), "r")
+    db.add(wl, "hw", Schedule.fixed(variant="b"), float("nan"), "r")
+    assert len(db) == 0
+    assert db.best(wl, "hw") is None
+    db.add(wl, "hw", Schedule.fixed(variant="c"), 1e-3, "r")
+    assert len(db) == 1
+
+
+def test_failed_save_leaks_no_temp_file(tmp_path):
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    db.add(W.vmacc(8, 8), "hw", Schedule.fixed(variant="a"), 1e-3, "r")
+    db.sessions.append({"bad": object()})  # unserializable mid-payload
+    with pytest.raises(TypeError):
+        db.save()
+    assert os.listdir(tmp_path) == []  # no db.json, and no mkstemp orphan
+
+
+def test_add_session_sanitizes_nonfinite_to_strict_json(tmp_path):
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    db.add_session({"speedup_vs_fixed": float("nan"),
+                    "workloads": [{"best_latency_s": float("inf")}],
+                    "wall_time_s": 1.5})
+    db.save()
+    with open(db.path) as f:
+        payload = json.load(f)  # strict parse: no Infinity/NaN tokens
+    assert payload["sessions"][0]["speedup_vs_fixed"] is None
+    assert payload["sessions"][0]["workloads"][0]["best_latency_s"] is None
+    assert payload["sessions"][0]["wall_time_s"] == 1.5
+
+
+# --------------------------------------------------------- dispatch cache ----
+
+def test_best_is_memoized_and_invalidated_by_add():
+    db = TuningDatabase()
+    wl = W.matmul(128, 128, 128, "bfloat16")
+    db.add(wl, V5E.name, Schedule.fixed(variant="first"), 2e-3, "analytic")
+    b1 = db.best(wl, V5E.name)
+    assert db.best(wl, V5E.name) is b1  # cached object, no re-parse
+    db.add(wl, V5E.name, Schedule.fixed(variant="better"), 1e-3, "analytic")
+    b2 = db.best(wl, V5E.name)
+    assert b2 is not b1 and b2[0]["variant"] == "better"  # invalidated
+
+
+def test_best_cache_invalidated_by_load(tmp_path):
+    wl = W.matmul(64, 64, 64)
+    p = tmp_path / "db.json"
+    _make_db_file(p, wl, "ondisk", 1e-3)
+    db = TuningDatabase()
+    assert db.best(wl, V5E.name) is None  # miss is cached too
+    db.load(str(p))
+    assert db.best(wl, V5E.name)[0]["variant"] == "ondisk"
+
+
+def test_dispatch_provenance_flips_on_database_write():
+    db = TuningDatabase()
+    wl = W.matmul(256, 256, 256, "bfloat16")
+    s, prov = best_schedule(wl, V5E, database=db)
+    assert prov == "fixed"
+    db.add(wl, V5E.name, Schedule.fixed(variant="tuned_one"), 1e-3,
+           "analytic")
+    s, prov = best_schedule(wl, V5E, database=db)
+    assert prov == "tuned" and s["variant"] == "tuned_one"
+
+
+def test_fixed_library_schedule_is_memoized():
+    wl = W.qmatmul(64, 64, 64)
+    assert fixed_library_schedule(wl, V5E) is fixed_library_schedule(wl, V5E)
+    # distinct hardware -> distinct cache entry, not a collision
+    from repro.core import V5E_MXU256
+    assert fixed_library_schedule(wl, V5E_MXU256) is not \
+        fixed_library_schedule(wl, V5E)

@@ -1,0 +1,122 @@
+"""MeasurePool / SubprocessRunner: process isolation with a true timeout
+kill. The fast cases use lightweight tasks from ``tests/_pool_tasks.py``
+(spawned workers must not pay the jax import); the end-to-end Pallas-build
+case is ``--runslow``."""
+
+import math
+import time
+
+import pytest
+
+from repro.core import INTERPRET, Schedule, SubprocessRunner, concretize, \
+    space_for, TraceSampler
+from repro.core import workload as W
+from repro.core.measure_pool import INVALID, MeasurePool
+
+import _pool_tasks
+
+
+def test_pool_runs_tasks_in_order():
+    with MeasurePool(_pool_tasks.double, workers=2, timeout_s=30.0) as pool:
+        out = pool.run_many(list(range(5)))
+    assert [o.status for o in out] == ["ok"] * 5
+    assert [o.value for o in out] == [0, 2, 4, 6, 8]
+    assert pool.restarts == 0
+
+
+def test_pool_kills_hanging_task_and_reuses_slot():
+    """The failure mode InterpretRunner cannot fix: a wedged task is KILLED
+    at its deadline (not abandoned) and the slot measures the next candidate.
+    The whole test must finish far inside the 30s hang to prove the kill."""
+    t0 = time.monotonic()
+    with MeasurePool(_pool_tasks.sleepy, workers=1, timeout_s=1.0) as pool:
+        out = pool.run_many([30.0, 0.01])
+        restarts = pool.restarts
+    elapsed = time.monotonic() - t0
+    assert out[0].status == "timeout"
+    assert out[1].status == "ok" and out[1].value == 0.01
+    assert restarts == 1  # the hung worker was killed and respawned
+    assert elapsed < 15.0  # nowhere near the 30s sleep: the kill is real
+
+
+def test_pool_task_exception_is_isolated_without_respawn():
+    with MeasurePool(_pool_tasks.boom, workers=1, timeout_s=30.0) as pool:
+        out = pool.run_many(["a", "b"])
+        restarts = pool.restarts
+    assert [o.status for o in out] == ["error", "error"]
+    assert "RuntimeError" in out[0].error
+    assert restarts == 0  # a raising task does not cost a worker
+
+
+def test_pool_respawns_after_worker_death():
+    with MeasurePool(_pool_tasks.die, workers=1, timeout_s=30.0) as pool:
+        out = pool.run_many([1, 2])
+        restarts = pool.restarts
+    assert [o.status for o in out] == ["crash", "crash"]
+    assert restarts == 2
+
+
+def test_pool_spawn_cost_not_billed_to_task_deadline():
+    """Worker startup (the jax import in real use) runs before the ready
+    signal; a task short of its own timeout must succeed even when spawn
+    plus initialization takes longer than timeout_s."""
+    with MeasurePool(_pool_tasks.sleepy, workers=1, timeout_s=1.0,
+                     initializer=_pool_tasks.slow_init) as pool:
+        out = pool.run_many([0.2])
+        restarts = pool.restarts
+    assert out[0].status == "ok" and out[0].value == 0.2
+    assert restarts == 0
+
+
+def test_pool_distributes_across_worker_processes():
+    # tasks long enough that one worker cannot drain the queue while the
+    # other boots: both slots must end up running candidates concurrently
+    with MeasurePool(_pool_tasks.pid_after_sleep, workers=2,
+                     timeout_s=30.0) as pool:
+        out = pool.run_many([0.8] * 4)
+    pids = {o.value for o in out if o.ok}
+    assert len(pids) == 2  # both slots actually ran tasks
+
+
+def test_subprocess_runner_timeout_yields_invalid_and_slot_survives():
+    """A hanging 'build' in SubprocessRunner surfaces as INVALID within the
+    timeout budget, and the runner keeps serving batches afterwards."""
+    wl = W.vmacc(8, 8)
+    s = Schedule.fixed(variant="x")
+    t0 = time.monotonic()
+    with SubprocessRunner(INTERPRET, workers=1, timeout_s=1.0,
+                          task=_pool_tasks.hang_measure) as runner:
+        lats = runner.run_batch(wl, [s, s.replace("variant", "y")])
+        assert lats == [INVALID, INVALID]
+        assert runner.pool_restarts == 2
+        # pool still functional after both kills
+        again = runner.run_batch(wl, [s])
+        assert again == [INVALID]
+    assert time.monotonic() - t0 < 20.0
+
+
+def _valid_samples(wl, hw, n, seed=0):
+    space = space_for(wl, hw)
+    sampler = TraceSampler(seed)
+    out = []
+    while len(out) < n:
+        s = sampler.sample(space)
+        if concretize(wl, hw, s).valid and s not in out:
+            out.append(s)
+    return out
+
+
+@pytest.mark.slow
+def test_subprocess_runner_end_to_end_pallas_build():
+    """Real interpret-mode measurement in worker processes: valid candidates
+    get finite latencies, an unknown variant stays isolated as INVALID."""
+    wl = W.matmul(8, 8, 8, "float32")
+    good = _valid_samples(wl, INTERPRET, 2)
+    bad = Schedule.fixed(variant="not_a_registered_variant")
+    with SubprocessRunner(INTERPRET, repeats=1, warmup=0, workers=2,
+                          timeout_s=300.0) as runner:
+        lats = runner.run_batch(wl, [good[0], bad, good[1]])
+    assert len(lats) == 3
+    assert math.isfinite(lats[0]) and math.isfinite(lats[2])
+    assert lats[0] > 0 and lats[2] > 0
+    assert lats[1] == INVALID

@@ -212,6 +212,81 @@ def test_tune_warm_start_counts_toward_trials():
     assert res.best_latency <= runner.run(wl, seed_schedule)
 
 
+# ------------------------------------------------- interleaved sessions ----
+
+from _test_runners import SlowAnalytic as _SlowAnalytic
+
+
+def test_interleaved_session_matches_serial_per_workload_trajectories():
+    """Cross-workload interleaving at depth 1 never speculates: each
+    workload's search sees exactly the measurements the serial path would,
+    so best schedules and latencies agree. (Different op families, so serial
+    within-session warm-start chaining cannot differ either.)"""
+    ops = [(1, W.matmul(128, 128, 128, "bfloat16")), (2, W.vmacc(64, 256))]
+    serial = TuningSession(V5E, AnalyticRunner(V5E),
+                           database=TuningDatabase()).tune_model(
+        ops, total_trials=16, seed=0)
+    inter = TuningSession(V5E, _SlowAnalytic(V5E), database=TuningDatabase(),
+                          interleave=True).tune_model(
+        ops, total_trials=16, seed=0)
+    assert not serial.interleaved and inter.interleaved
+    for a, b in zip(serial.reports, inter.reports):
+        assert a.best_schedule == b.best_schedule
+        assert a.best_latency == b.best_latency
+        assert a.trials == b.trials
+
+
+def test_interleaved_session_overlaps_measurement_with_search():
+    ops = [(1, W.matmul(128, 128, 128, "bfloat16")), (1, W.vmacc(64, 256)),
+           (1, W.matmul(256, 128, 128, "bfloat16"))]
+    res = TuningSession(V5E, _SlowAnalytic(V5E),
+                        interleave=True).tune_model(ops, total_trials=24,
+                                                    seed=0)
+    assert res.measure_time_s > 0
+    assert res.overlap_s > 0  # another workload evolved during measurement
+    assert 0 < res.overlap_fraction <= 1
+    assert res.summary()["overlap_fraction"] > 0
+
+
+def test_interleaved_session_is_deterministic():
+    ops = [(1, W.matmul(128, 128, 128, "bfloat16")), (2, W.vmacc(64, 256))]
+    r1 = TuningSession(V5E, _SlowAnalytic(V5E), interleave=True,
+                       pipeline_depth=2).tune_model(ops, total_trials=16,
+                                                    seed=4)
+    r2 = TuningSession(V5E, _SlowAnalytic(V5E), interleave=True,
+                       pipeline_depth=2).tune_model(ops, total_trials=16,
+                                                    seed=4)
+    for a, b in zip(r1.reports, r2.reports):
+        assert a.best_schedule == b.best_schedule
+        assert a.best_latency == b.best_latency
+
+
+def test_analytic_session_defaults_to_serial():
+    ops = [(1, W.matmul(64, 64, 64, "bfloat16")), (1, W.vmacc(32, 64))]
+    res = TuningSession(V5E, AnalyticRunner(V5E)).tune_model(
+        ops, total_trials=8, seed=0)
+    assert not res.interleaved
+    assert res.overlap_s == 0.0
+
+
+@pytest.mark.slow
+def test_interleaved_interpret_session_end_to_end(tmp_path):
+    """Real Pallas builds through the interleaved scheduler: deduped,
+    database-backed, finite results, and a recorded overlap fraction."""
+    ops = [(2, W.matmul(8, 8, 8, "float32")), (1, W.vmacc(8, 8))]
+    db = TuningDatabase(str(tmp_path / "db.json"))
+    runner = InterpretRunner(INTERPRET, repeats=1, warmup=0)
+    session = TuningSession(INTERPRET, runner, database=db, min_trials=3,
+                            pipeline_depth=2)
+    res = session.tune_model(ops, total_trials=6, seed=0)
+    assert res.interleaved  # auto: interpret runner is overlap-capable
+    assert len(res.reports) == 2
+    for rep in res.reports:
+        assert math.isfinite(rep.best_latency) and rep.best_latency > 0
+    assert res.overlap_fraction > 0
+    assert db.sessions and db.sessions[0]["interleaved"] is True
+
+
 # --------------------------------------------- instruction census (bugfix) ----
 
 def _census_pair(order):
