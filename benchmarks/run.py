@@ -32,7 +32,8 @@ from benchmarks import nets
 from repro.core import (AnalyticRunner, InterpretRunner, TuningDatabase,
                         TuningSession, V5E, V5E_MXU256, V5E_VMEM32,
                         V5E_VMEM64, INTERPRET, concretize,
-                        fixed_library_schedule, space_for, tune, xla_latency)
+                        fixed_library_schedule, space_for, tune,
+                        v1_distinct_configs, xla_latency)
 from repro.core.space import instruction_census
 from repro.core import workload as W
 
@@ -160,7 +161,8 @@ def networks(trials: int = 16, measured: bool = True) -> None:
     for net_name, builder in nets.NETWORKS.items():
         ops = builder()
         session = TuningSession(V5E, AnalyticRunner(V5E), database=db)
-        res = session.tune_model(ops, total_trials=trials * len(ops), seed=0)
+        res = session.tune_model(ops, total_trials=trials * len(ops), seed=0,
+                                 model=net_name)
         t_tuned, t_fixed = res.tuned_latency, res.fixed_latency
         emit(f"net_v5e/{net_name}/tuned", t_tuned * 1e6,
              f"vs_fixed={t_fixed / t_tuned:.2f}x "
@@ -183,7 +185,8 @@ def networks(trials: int = 16, measured: bool = True) -> None:
             # interleaves one workload's measurement with another's search
             session = TuningSession(INTERPRET, runner, database=db)
             res = session.tune_model(
-                ops, total_trials=max(8, trials // 2) * len(ops), seed=0)
+                ops, total_trials=max(8, trials // 2) * len(ops), seed=0,
+                model=net_name)
             t_tuned, t_fixed = res.tuned_latency, res.fixed_latency
             t_xla = sum(r.count * xla_latency(r.workload, repeats=2)
                         for r in res.reports)
@@ -197,6 +200,98 @@ def networks(trials: int = 16, measured: bool = True) -> None:
             improvements_xla.append(1 - min(t_tuned / t_fixed, 1.0))
         emit("net_interp/mean_improvement_vs_fixed_measured", 0.0,
              f"{np.mean(improvements_xla) * 100:.0f}%")
+
+
+# ----------------------------------------------------------- design space ----
+
+def space_cardinality() -> None:
+    """Size of the generative design-space program per workload vs the old
+    flat (independent-categorical, 3-point-SCALES) space — both counted as
+    *distinct postprocessor-valid concrete configurations*, the honest
+    metric (nominal flat-space products overcount clamp-duplicated scales).
+    Doubles as the CI search-space smoke: the program space must be strictly
+    larger for the op families with tile splits."""
+    cases = [
+        ("matmul", W.matmul(2048, 2048, 2048, "bfloat16")),
+        ("qmatmul", W.qmatmul(2048, 2048, 2048)),
+        # composite (non-pow2) reduction extent: real factorizations reach
+        # splits the halving-ladder scale grid never could (k = 3 * 4096,
+        # the transformer FFN shape)
+        ("gemv", W.gemv(4096, 12288, "bfloat16")),
+        ("vmacc", W.vmacc(2048, 2048)),
+        ("attention", W.attention(1, 8, 8, 1024, 1024, 128, "bfloat16")),
+    ]
+    for name, wl in cases:
+        prog = space_for(wl, V5E)
+        v2 = prog.distinct_configs()
+        v1 = v1_distinct_configs(wl, V5E)
+        traces = prog.cardinality()
+        emit(f"space/{name}/v2_configs", float(v2),
+             f"v1={v1} ratio={v2 / max(v1, 1):.2f}x traces={traces}")
+        if name in ("matmul", "qmatmul", "gemv"):
+            assert v2 > v1, (
+                f"{name}: program space ({v2}) must be strictly larger "
+                f"than the v1 flat space ({v1})")
+
+
+# --------------------------------------------------------- session report ----
+
+def session_report(db: TuningDatabase) -> list[tuple[str, float, str]]:
+    """Per-model latency/overlap trends across the sessions recorded in a
+    tuning database (ROADMAP: session-level reporting). Returns
+    ``(name, us, derived)`` rows; the trend column is the best-latency delta
+    vs the previous session of the same model."""
+    rows: list[tuple[str, float, str]] = []
+    by_model: dict[str, list[tuple[int, dict]]] = {}
+    for i, s in enumerate(db.sessions):
+        model = s.get("model") or f"{s.get('hw', '?')}/{s.get('runner', '?')}"
+        by_model.setdefault(model, []).append((i, s))
+    for model, entries in by_model.items():
+        prev_latency = None
+        best_latency = float("inf")
+        for i, s in entries:
+            tuned = s.get("tuned_latency_s")
+            # skip degenerate summaries (empty op list, sanitized non-finite)
+            if not isinstance(tuned, (int, float)) or tuned <= 0:
+                continue
+            if prev_latency is not None:
+                trend = f"vs_prev={tuned / prev_latency:.3f}x"
+            else:
+                trend = "vs_prev=baseline"
+            overlap = s.get("overlap_fraction")
+            overlap_txt = (f"{overlap:.2f}"
+                           if isinstance(overlap, (int, float)) else "n/a")
+            speedup = s.get("speedup_vs_fixed")
+            speedup_txt = (f"{speedup:.2f}x"
+                           if isinstance(speedup, (int, float)) else "n/a")
+            rows.append((f"report/{model}/session{i}", tuned * 1e6,
+                         f"{trend} speedup_vs_fixed={speedup_txt} "
+                         f"overlap={overlap_txt} "
+                         f"trials={s.get('total_trials', '?')}"))
+            prev_latency = tuned
+            best_latency = min(best_latency, tuned)
+        if prev_latency is not None:
+            valid = [s.get("tuned_latency_s") for _, s in entries]
+            first = next(t for t in valid
+                         if isinstance(t, (int, float)) and t > 0)
+            rows.append((f"report/{model}/trend", best_latency * 1e6,
+                         f"sessions={len(entries)} "
+                         f"best_vs_first={best_latency / first:.3f}x"))
+    return rows
+
+
+def report(db_path: str | None) -> None:
+    path = db_path or os.environ.get("REPRO_TUNING_DB")
+    if not path or not os.path.exists(path):
+        print(f"# no tuning database at {path!r}; run a tuning session first",
+              file=sys.stderr)
+        return
+    db = TuningDatabase(path)
+    if not db.sessions:
+        print(f"# database {path} holds no session summaries", file=sys.stderr)
+        return
+    for name, us, derived in session_report(db):
+        emit(name, us, derived)
 
 
 # ------------------------------------------------------------ tuning cost ----
@@ -249,6 +344,7 @@ def tuning_cost() -> None:
 
 
 SUITES = {
+    "space": space_cardinality,
     "matmul": matmul_suite,
     "hw_sweep": hw_sweep,
     "trace": trace_analysis,
@@ -256,19 +352,30 @@ SUITES = {
     "tuning_cost": tuning_cost,
 }
 
+_NO_TRIALS_ARG = ("tuning_cost", "space")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", choices=list(SUITES) + ["all"], default="all")
     ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--report", action="store_true",
+                    help="print per-model latency/overlap trends across the "
+                         "sessions stored in the tuning database, then exit")
+    ap.add_argument("--db", default=None,
+                    help="tuning database path for --report "
+                         "(default: $REPRO_TUNING_DB)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.report:
+        report(args.db)
+        return
     t0 = time.perf_counter()
     for name, fn in SUITES.items():
         if args.suite not in ("all", name):
             continue
         kwargs = {}
-        if args.trials is not None and name != "tuning_cost":
+        if args.trials is not None and name not in _NO_TRIALS_ARG:
             kwargs = {"trials": args.trials}
         fn(**kwargs)
     print(f"# total wall time: {time.perf_counter() - t0:.1f}s")

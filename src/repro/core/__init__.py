@@ -10,7 +10,9 @@ from repro.core.hardware import (HardwareConfig, V5E, V5E_VMEM32, V5E_VMEM64,
 from repro.core.workload import (Workload, matmul, qmatmul, gemv, vmacc,
                                  attention)
 from repro.core.schedule import Schedule, Decision
-from repro.core.space import space_for, concretize, KernelParams
+from repro.core.space import (space_for, concretize, KernelParams,
+                              SpaceProgram, flat_space_v1, tile_candidates,
+                              v1_distinct_configs)
 from repro.core.sampler import TraceSampler
 from repro.core.cost_model import RidgeCostModel, features
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
@@ -28,7 +30,8 @@ __all__ = [
     "HardwareConfig", "V5E", "V5E_VMEM32", "V5E_VMEM64", "V5E_MXU256",
     "INTERPRET", "SWEEP", "Workload", "matmul", "qmatmul", "gemv", "vmacc",
     "attention", "Schedule", "Decision", "space_for", "concretize",
-    "KernelParams", "TraceSampler", "RidgeCostModel", "features",
+    "KernelParams", "SpaceProgram", "flat_space_v1", "tile_candidates",
+    "v1_distinct_configs", "TraceSampler", "RidgeCostModel", "features",
     "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
     "run_batch", "xla_latency",
     "TuningDatabase", "global_database", "reset_global_database",

@@ -6,6 +6,14 @@ hand-rolled schedule/workload features (dependency-free, deterministic).
 The model predicts log-latency; before enough measurements exist it reports
 itself unfitted and the tuner falls back to pure sampling, matching
 MetaSchedule's warm-up phase.
+
+Updates accumulate the Xᵀ X / Xᵀ y sufficient statistics instead of storing
+every sample and refitting from scratch: one ``update`` costs O(d²) and the
+d×d solve is deferred to the next ``predict`` after new evidence arrives, so
+per-sample cost stays flat over a whole tuning session instead of growing
+O(n·d²) with history length. Features are computed from the schedule's real
+tile-split factors (block shapes, grid extents) — the quantities the
+generative space program actually samples.
 """
 
 from __future__ import annotations
@@ -21,7 +29,8 @@ from repro.core.workload import Workload
 
 def features(workload: Workload, hw: HardwareConfig,
              params: space_lib.KernelParams) -> np.ndarray:
-    """~16-dim feature vector for one concrete schedule."""
+    """~18-dim feature vector for one concrete schedule, from the real
+    split factors the program sampled."""
     flops = workload.flops()
     traffic = space_lib.hbm_traffic_bytes(workload, params)
     steps = float(np.prod(params.grid))
@@ -48,52 +57,80 @@ def features(workload: Workload, hw: HardwareConfig,
         pad_waste,
         1.0 if bm % 8 == 0 else 0.0,
         1.0 if bn % 128 == 0 else 0.0,
+        # real split factors: reduction-axis trip count (store-traffic
+        # interplay) and output-tile aspect ratio
+        math.log1p(float(params.grid[-1])),
+        min(bm, bn) / max(bm, bn, 1),
         1.0,
     ]
     return np.asarray(f, dtype=np.float64)
 
 
 class RidgeCostModel:
-    """Online ridge regression on log-latency. Refit is O(d^3), d=16."""
+    """Online ridge regression on log-latency via sufficient statistics.
+
+    ``update`` is O(d²) (accumulate Σx, Σxxᵀ, Σxy, Σy); the O(d³) solve —
+    standardized, exactly the batch refit the model used to run per sample —
+    happens lazily on the first ``predict`` after new evidence.
+    """
 
     MIN_SAMPLES = 8
 
     def __init__(self, l2: float = 1e-3):
         self.l2 = l2
-        self._x: list[np.ndarray] = []
-        self._y: list[float] = []
+        self.n = 0
+        self._sum_x: np.ndarray | None = None
+        self._xtx: np.ndarray | None = None
+        self._xty: np.ndarray | None = None
+        self._sum_y = 0.0
         self._w: np.ndarray | None = None
+        self._dirty = False
 
     @property
     def fitted(self) -> bool:
-        return self._w is not None
+        return self.n >= self.MIN_SAMPLES
 
     def update(self, feats: np.ndarray, latency_s: float) -> None:
         if not np.isfinite(latency_s) or latency_s <= 0:
             return
-        self._x.append(feats)
-        self._y.append(math.log(latency_s))
-        if len(self._x) >= self.MIN_SAMPLES:
-            self._refit()
+        x = np.asarray(feats, dtype=np.float64)
+        y = math.log(latency_s)
+        if self._sum_x is None:
+            d = x.shape[0]
+            self._sum_x = np.zeros(d)
+            self._xtx = np.zeros((d, d))
+            self._xty = np.zeros(d)
+        self.n += 1
+        self._sum_x += x
+        self._xtx += np.outer(x, x)
+        self._xty += x * y
+        self._sum_y += y
+        self._dirty = True
 
     def _refit(self) -> None:
-        x = np.stack(self._x)
-        y = np.asarray(self._y)
-        # standardize features for conditioning
-        self._mu = x.mean(axis=0)
-        self._sd = x.std(axis=0) + 1e-9
-        xs = (x - self._mu) / self._sd
-        d = xs.shape[1]
-        a = xs.T @ xs + self.l2 * np.eye(d)
-        b = xs.T @ (y - y.mean())
-        self._ymean = y.mean()
+        n = float(self.n)
+        mu = self._sum_x / n
+        var = np.maximum(np.diag(self._xtx) / n - mu * mu, 0.0)
+        sd = np.sqrt(var) + 1e-9
+        ymean = self._sum_y / n
+        # centered moments from the sufficient statistics:
+        #   Σ(x-μ)(x-μ)ᵀ = XᵀX - n μμᵀ ;  Σ(x-μ)(y-ȳ) = Xᵀy - ȳ Σx
+        a_c = self._xtx - n * np.outer(mu, mu)
+        b_c = self._xty - ymean * self._sum_x
+        d = self._sum_x.shape[0]
+        a = a_c / np.outer(sd, sd) + self.l2 * np.eye(d)
+        b = b_c / sd
+        self._mu, self._sd, self._ymean = mu, sd, ymean
         self._w = np.linalg.solve(a, b)
+        self._dirty = False
 
     def predict(self, feats: np.ndarray) -> float:
         """Predicted log-latency (lower is better)."""
-        if self._w is None:
+        if not self.fitted:
             return 0.0
-        xs = (feats - self._mu) / self._sd
+        if self._dirty or self._w is None:
+            self._refit()
+        xs = (np.asarray(feats, dtype=np.float64) - self._mu) / self._sd
         return float(xs @ self._w + self._ymean)
 
     def rank(self, feats_batch: list[np.ndarray]) -> np.ndarray:

@@ -61,10 +61,16 @@ class TuningDatabase:
             "runner": runner_name,
         }
         bucket = self.records.setdefault(key, [])
-        # Exact duplicates add no information but accrete without bound when
-        # warm-started sessions re-measure deterministic records; drop them.
-        if entry in bucket:
-            return
+        # Duplicates add no information but accrete without bound when
+        # warm-started sessions re-measure deterministic records. Dedup on
+        # semantic identity (decision signature + latency + runner), not raw
+        # JSON: the same schedule serializes differently across trace
+        # versions and provenance tags (e.g. re-adopted warm-start traces).
+        sig = schedule.signature()
+        for r in bucket:
+            if (r["latency_s"] == latency_s and r["runner"] == runner_name
+                    and Schedule.from_json(r["schedule"]).signature() == sig):
+                return
         bucket.append(entry)
         self._best_cache.pop(key, None)
 

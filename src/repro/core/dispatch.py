@@ -35,6 +35,12 @@ def fixed_library_schedule(workload: Workload, hw: HardwareConfig) -> Schedule:
     for the baseline hardware and *not* re-derived per config (exactly the
     property of muRISCV-NN the paper exploits: its kernels assume one VLEN).
     Memoized per (workload, hardware) — see module docstring.
+
+    These stay v1 flat-layout traces (``*_scale`` decisions) on purpose:
+    they are what a hand-written library looks like — no generative
+    structure — and they exercise the legacy concretize path every
+    deployment relies on. When one seeds a generative search it is adopted
+    onto the workload's :class:`~repro.core.space.SpaceProgram` via replay.
     """
     cache_key = (workload.key(), hw.name)
     cached = _FIXED_CACHE.get(cache_key)
@@ -106,7 +112,7 @@ def kernel_params(workload: Workload, hw: HardwareConfig = V5E,
 def ensure_tuned(ops, hw: HardwareConfig = V5E,
                  runner=None, database: TuningDatabase | None = None,
                  trials_per_workload: int = 32, seed: int = 0,
-                 log=None):
+                 log=None, model: str = ""):
     """Fill the dispatch database for a whole model config.
 
     Runs a :class:`~repro.core.session.TuningSession` over the workloads of
@@ -130,4 +136,4 @@ def ensure_tuned(ops, hw: HardwareConfig = V5E,
     session = TuningSession(hw, runner, database=db, log=log)
     return session.tune_model(missing,
                               total_trials=trials_per_workload * len(missing),
-                              seed=seed)
+                              seed=seed, model=model)

@@ -1,18 +1,23 @@
 """Evolutionary search over schedule traces, guided by the cost model.
 
-MetaSchedule's search: keep a population of traces, mutate/crossover, rank
-with the learned cost model, measure the top predicted candidates, repeat.
+MetaSchedule's search: keep a population of traces, mutate/crossover via
+trace replay on the design-space program, rank with the learned cost model,
+measure the top predicted candidates, repeat. Measured warm-start schedules
+— including v1 flat records from the database — are *adopted* onto the
+program (replayed with legacy translation) before they seed the population,
+so every population member shares the program's decision layout and
+mutation/crossover stay coherent.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core import space as space_lib
 from repro.core.cost_model import RidgeCostModel, features
 from repro.core.hardware import HardwareConfig
 from repro.core.sampler import TraceSampler
 from repro.core.schedule import Schedule
+from repro.core.space import SpaceProgram
 from repro.core.workload import Workload
 
 
@@ -20,7 +25,7 @@ from repro.core.workload import Workload
 class EvolutionarySearch:
     workload: Workload
     hw: HardwareConfig
-    space: dict[str, tuple]
+    space: SpaceProgram
     sampler: TraceSampler
     population_size: int = 32
     mutation_rate: float = 0.6
@@ -32,15 +37,26 @@ class EvolutionarySearch:
 
     # -------------------------------------------------------------------------
     def _valid(self, s: Schedule) -> bool:
-        return space_lib.concretize(self.workload, self.hw, s).valid
+        return self.space.validate(s).valid
 
     def seed_population(self, measured: list[Schedule]) -> None:
-        pop = [s for s in measured if self._valid(s)]
+        """Seed from measured traces, adopted onto the program (v1 records
+        and foreign-hardware transfers translate through the legacy hooks),
+        then fill with fresh samples."""
+        pop: list[Schedule] = []
+        seen: set[tuple] = set()
+        for s in measured:
+            t = self.space.adopt(s, self.sampler.rng)
+            sig = t.signature()
+            if sig not in seen and self._valid(t):
+                seen.add(sig)
+                pop.append(t)
         tries = 0
         while len(pop) < self.population_size and tries < 20 * self.population_size:
             s = self.sampler.sample(self.space)
             tries += 1
-            if self._valid(s):
+            if s.signature() not in seen and self._valid(s):
+                seen.add(s.signature())
                 pop.append(s)
         self.population = pop[: self.population_size]
 
@@ -58,10 +74,12 @@ class EvolutionarySearch:
                 cand = self.sampler.sample(self.space)
             elif r < self.immigrant_rate + self.crossover_rate and len(parents) >= 2:
                 i, j = rng.choice(len(parents), size=2, replace=False)
-                cand = self.sampler.crossover(parents[int(i)], parents[int(j)])
+                cand = self.sampler.crossover(self.space, parents[int(i)],
+                                              parents[int(j)])
             else:
                 p = parents[int(rng.integers(len(parents)))]
-                cand = self.sampler.mutate(p, n_mutations=1 + int(rng.integers(2)))
+                cand = self.sampler.mutate(self.space, p,
+                                           n_mutations=1 + int(rng.integers(2)))
             if self._valid(cand):
                 children.append(cand)
         # de-dup, rank by predicted latency
@@ -72,8 +90,7 @@ class EvolutionarySearch:
                 seen.add(sig)
                 uniq.append(c)
         if cost_model.fitted:
-            feats = [features(self.workload, self.hw,
-                              space_lib.concretize(self.workload, self.hw, c))
+            feats = [features(self.workload, self.hw, self.space.validate(c))
                      for c in uniq]
             order = cost_model.rank(feats)
             uniq = [uniq[int(i)] for i in order]

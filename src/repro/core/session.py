@@ -84,6 +84,7 @@ class SessionResult:
     pipeline_depth: int = 1
     measure_time_s: float = 0.0  # total runner measurement time
     overlap_s: float = 0.0  # measurement time hidden behind search
+    model: str = ""  # model/config name, for cross-session trend reports
 
     @property
     def overlap_fraction(self) -> float:
@@ -109,6 +110,7 @@ class SessionResult:
     def summary(self) -> dict:
         """JSON-able session summary (what the database stores)."""
         return {
+            "model": self.model,
             "hw": self.hw.name,
             "runner": self.runner_name,
             "total_trials": self.total_trials,
@@ -261,7 +263,7 @@ class TuningSession:
         return results, max(0.0, measure_s - wait_s)
 
     def tune_model(self, ops: ModelConfig, total_trials: int = 256,
-                   seed: int = 0) -> SessionResult:
+                   seed: int = 0, model: str = "") -> SessionResult:
         t_start = time.perf_counter()
         ops = list(ops)
         unique = dedup_workloads(ops)
@@ -294,7 +296,7 @@ class TuningSession:
             total_trials=sum(r.trials for r in reports),
             wall_time_s=time.perf_counter() - t_start,
             interleaved=interleave, pipeline_depth=depth,
-            measure_time_s=measure_s, overlap_s=overlap_s)
+            measure_time_s=measure_s, overlap_s=overlap_s, model=model)
         if self.database is not None:
             self.database.add_session(result.summary())
             if self.database.path:

@@ -1,26 +1,53 @@
-"""Design-space generation and schedule concretization.
+"""Generative design-space programs and schedule concretization.
 
-``space_for`` builds the decision space of a workload on a hardware config —
-the support of the probabilistic program MetaSchedule would sample. The
-decisions compose the intrinsic-variant choice (the paper's multi-VL
-registration) with tile-shape refinements, loop order, and the
-accumulate-in-registers choice that Algorithm 1 hinges on.
+The paper's central device is tuning via *probabilistic programs*: a
+generative schedule program whose sampling decisions depend on one another
+and whose illegal traces are rejected by postprocessors. ``space_for``
+builds that program for a workload on a hardware config as a
+:class:`SpaceProgram` — an ordered list of sampling instructions
+(``sample_categorical``, ``sample_tile_split``) executed by a trace
+interpreter:
 
-``concretize`` replays a schedule trace into :class:`KernelParams` — the
-static parameters a Pallas kernel is built from — and validates it against
-the hardware (VMEM fit, alignment), marking invalid candidates exactly as
-MetaSchedule's postprocessors reject illegal traces.
+- the **intrinsic variant** draw comes first (the paper's multi-VL
+  registration);
+- **tile-split** draws then condition on it: their candidate sets are the
+  true perfect-tile factorizations of the workload's (alignment-padded)
+  extents, capped at the chosen variant's base block — pick a different
+  variant and the tile candidate sets change. The legacy 3-point ``SCALES``
+  grid is embedded as anchors, so the v1 flat space is a strict subset of
+  the program space;
+- the **accumulate** draw conditions on the chosen k-split: a schedule with
+  a single k-step has nothing to re-visit, so only the accumulate-in-VMEM
+  form is sampled (Algorithm 1).
+
+Mutation and crossover are *trace replay* (:meth:`SpaceProgram.replay`):
+pin edited decisions and re-execute the program so dependent candidate sets
+refresh and the child trace stays coherent. v1 flat traces (old database
+records, :meth:`Schedule.fixed` library schedules) are *adopted* onto a
+program the same way — their scale decisions translate to the nearest tile
+anchor — preserving the Fig. 4 warm-start transfer path.
+
+``concretize`` replays either trace layout into :class:`KernelParams` — the
+static parameters a Pallas kernel is built from — and validates it through a
+composable postprocessor pipeline (block alignment, non-empty grid, VMEM
+fit), marking invalid candidates exactly as MetaSchedule's postprocessors
+reject illegal traces.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Callable, Iterator, Mapping
 
 from repro.core import intrinsics
 from repro.core.hardware import HardwareConfig
-from repro.core.schedule import Schedule
+from repro.core.schedule import (PROV_LEGACY, PROV_PINNED, PROV_SAMPLED,
+                                 Decision, Schedule)
 from repro.core.workload import Workload, dtype_bytes
 
+# Legacy v1 tile scales — kept both for decoding old flat traces and as the
+# anchor points embedded in every tile-split candidate set (the v1 grid is a
+# subset of the program space, so program search can never do worse).
 SCALES = (1.0, 0.5, 0.25)
 
 
@@ -50,10 +77,369 @@ class KernelParams:
     why_invalid: str = ""
 
 
-def space_for(workload: Workload, hw: HardwareConfig) -> dict[str, tuple]:
-    """Decision name -> candidate tuple."""
-    variants = intrinsics.variants_for(workload, hw)
-    names = tuple(v.name for v in variants)
+# =============================================================================
+# Postprocessors — MetaSchedule's trace-rejection pipeline, composable.
+# Each takes (workload, hw, params) and returns "" (legal) or a reason.
+# =============================================================================
+
+def postproc_block_alignment(workload: Workload, hw: HardwareConfig,
+                             params: KernelParams) -> str:
+    """Blocks must respect the hardware tiling grain (sublane x lane)."""
+    lane = hw.lane_align(workload.dtype)
+    sub = hw.sublane_align(workload.dtype)
+    if params.op in ("matmul", "qmatmul"):
+        bm, bn, bk = params.block
+        if bm % sub or bn % lane or bk % lane:
+            return (f"block {params.block} breaks {sub}x{lane} "
+                    f"sublane/lane alignment")
+    elif params.op == "gemv":
+        if params.block[1] % lane:
+            return f"k-block {params.block[1]} not a lane multiple ({lane})"
+    elif params.op == "vmacc":
+        if params.block[0] % sub:
+            return f"row-block {params.block[0]} not a sublane multiple ({sub})"
+    return ""
+
+
+def postproc_nonempty_grid(workload: Workload, hw: HardwareConfig,
+                           params: KernelParams) -> str:
+    for g in params.grid:
+        if g <= 0:
+            return f"empty grid {params.grid}"
+    return ""
+
+
+def postproc_vmem_fit(workload: Workload, hw: HardwareConfig,
+                      params: KernelParams) -> str:
+    if params.vmem_bytes > hw.vmem_capacity * 0.9:
+        return (f"vmem footprint {params.vmem_bytes} exceeds 90% of "
+                f"{hw.vmem_capacity}")
+    return ""
+
+
+DEFAULT_POSTPROCESSORS = (postproc_block_alignment, postproc_nonempty_grid,
+                          postproc_vmem_fit)
+
+
+def apply_postprocessors(workload: Workload, hw: HardwareConfig,
+                         params: KernelParams,
+                         postprocessors=DEFAULT_POSTPROCESSORS) -> KernelParams:
+    """Run the rejection pipeline; the first failing check invalidates."""
+    for post in postprocessors:
+        why = post(workload, hw, params)
+        if why:
+            return dataclasses.replace(params, valid=False, why_invalid=why)
+    return params
+
+
+# =============================================================================
+# Sampling instructions and the trace interpreter.
+# =============================================================================
+
+SAMPLE_CATEGORICAL = "sample_categorical"
+SAMPLE_TILE_SPLIT = "sample_tile_split"
+
+# Candidate sets are functions of the choices made so far (the generative
+# part); legacy hooks translate a v1 flat trace into a proposal for this
+# decision, given both the old trace and the replay context so far (the
+# adoption part).
+Context = Mapping[str, Any]
+CandidatesFn = Callable[[Context], tuple]
+LegacyFn = Callable[[Context, Context], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Instruction:
+    """One sampling site of a generative schedule program."""
+
+    name: str
+    kind: str  # SAMPLE_CATEGORICAL | SAMPLE_TILE_SPLIT
+    candidates: CandidatesFn
+    legacy: LegacyFn | None = None  # v1-trace translation hook
+
+
+def sample_categorical(name: str, candidates, legacy=None) -> Instruction:
+    fn = candidates if callable(candidates) else (
+        lambda ctx, _c=tuple(candidates): _c)
+    return Instruction(name, SAMPLE_CATEGORICAL, fn, legacy)
+
+
+def sample_tile_split(name: str, candidates: CandidatesFn,
+                      legacy: LegacyFn | None = None) -> Instruction:
+    return Instruction(name, SAMPLE_TILE_SPLIT, candidates, legacy)
+
+
+def tile_candidates(extent: int, align: int, base: int) -> tuple[int, ...]:
+    """Perfect-tile block candidates for one loop extent.
+
+    All ``align``-multiples that exactly divide the alignment-padded extent
+    (true factorization — the grid covers the padded loop with zero extra
+    padding), capped at the variant's base block ``base`` (a variant is a
+    granularity ceiling, as VL caps the paper's intrinsics), plus the legacy
+    v1 ``SCALES`` anchors of ``base`` so the flat space embeds."""
+    padded = round_up(extent, align)
+    cap = max(align, base)
+    cands = {d for d in range(align, min(cap, padded) + 1, align)
+             if padded % d == 0}
+    for s in SCALES:
+        cands.add(_scaled(base, s, align, extent))
+    return tuple(sorted(cands))
+
+
+class SpaceProgram:
+    """A generative design-space program: ordered sampling instructions
+    executed by a trace interpreter, where later instructions' candidate
+    sets may condition on earlier choices.
+
+    Execution modes (all deterministic given the rng state):
+
+    - :meth:`sample` — run the program drawing every decision fresh;
+    - :meth:`replay` — run the program keeping pinned decisions whose value
+      is still in the (freshly computed) candidate set and resampling the
+      rest: the mutation/crossover primitive;
+    - :meth:`adopt` — replay an existing trace (v1 flat or v2) onto this
+      program, translating legacy decisions through the instructions'
+      ``legacy`` hooks (database warm-start transfer).
+    """
+
+    def __init__(self, workload: Workload, hw: HardwareConfig,
+                 instructions: list[Instruction],
+                 postprocessors=DEFAULT_POSTPROCESSORS):
+        self.workload = workload
+        self.hw = hw
+        self.instructions = tuple(instructions)
+        self.postprocessors = tuple(postprocessors)
+
+    # ---- introspection -------------------------------------------------------
+    def names(self) -> list[str]:
+        return [ins.name for ins in self.instructions]
+
+    def candidates(self, name: str, ctx: Context | None = None) -> tuple:
+        """Candidate set of one decision given upstream ``ctx`` choices;
+        missing upstream choices default to each instruction's first
+        candidate (the "default prefix")."""
+        ctx = dict(ctx or {})
+        for ins in self.instructions:
+            cands = ins.candidates(ctx)
+            if ins.name == name:
+                return tuple(cands)
+            ctx.setdefault(ins.name, cands[0])
+        raise KeyError(name)
+
+    def __getitem__(self, name: str) -> tuple:
+        """Candidate set under the default prefix (``program["variant"]`` is
+        the full variant ladder — the common introspection)."""
+        return self.candidates(name)
+
+    def __len__(self) -> int:
+        return len(self.instructions)
+
+    # ---- trace interpreter ---------------------------------------------------
+    def replay(self, pinned: Mapping[str, Any], rng,
+               legacy: Mapping[str, Any] | None = None) -> Schedule:
+        """Execute the program: keep each pinned decision if its value is in
+        the freshly computed candidate set, else translate via the legacy
+        hook (nearest candidate), else resample. Downstream candidate sets
+        are always recomputed from upstream outcomes, so the returned trace
+        is coherent by construction."""
+        ctx: dict[str, Any] = {}
+        decisions: list[Decision] = []
+        for ins in self.instructions:
+            cands = tuple(ins.candidates(ctx))
+            if not cands:
+                raise RuntimeError(
+                    f"instruction {ins.name} produced no candidates "
+                    f"(ctx {ctx}) for {self.workload.key()}")
+            choice, prov = None, ""
+            if ins.name in pinned and _contains(cands, pinned[ins.name]):
+                choice, prov = pinned[ins.name], PROV_PINNED
+            elif legacy is not None and ins.legacy is not None:
+                proposed = ins.legacy(legacy, ctx)
+                if proposed is not None:
+                    choice, prov = _snap(proposed, cands), PROV_LEGACY
+            if choice is None:
+                choice = cands[int(rng.integers(len(cands)))]
+                prov = PROV_SAMPLED
+            ctx[ins.name] = choice
+            decisions.append(Decision(ins.name, choice, cands, prov))
+        return Schedule(tuple(decisions), version=2)
+
+    def sample(self, rng) -> Schedule:
+        return self.replay({}, rng)
+
+    def adopt(self, schedule: Schedule, rng) -> Schedule:
+        """Replay an existing trace onto this program. v2 traces pin
+        directly; v1 flat traces (old database records, library schedules,
+        foreign-hardware transfers) translate through the legacy hooks.
+        Decisions that no longer fit (e.g. an unregistered variant) are
+        resampled, so the result is always a coherent program trace."""
+        d = schedule.as_dict()
+        return self.replay(d, rng, legacy=d)
+
+    # ---- validation ----------------------------------------------------------
+    def validate(self, schedule: Schedule) -> KernelParams:
+        """Concretize + run this program's postprocessor pipeline."""
+        return concretize(self.workload, self.hw, schedule,
+                          postprocessors=self.postprocessors)
+
+    # ---- enumeration ---------------------------------------------------------
+    def traces(self, limit: int = 1_000_000) -> Iterator[dict[str, Any]]:
+        """Depth-first enumeration of every trace (as a decision dict)."""
+        n_out = 0
+
+        def rec(i: int, ctx: dict) -> Iterator[dict]:
+            nonlocal n_out
+            if i == len(self.instructions):
+                n_out += 1
+                yield dict(ctx)
+                return
+            ins = self.instructions[i]
+            for c in ins.candidates(ctx):
+                if n_out >= limit:
+                    return
+                ctx[ins.name] = c
+                yield from rec(i + 1, ctx)
+            ctx.pop(ins.name, None)
+
+        yield from rec(0, {})
+
+    def cardinality(self, limit: int = 1_000_000) -> int:
+        """Number of traces the program can generate (dependent candidate
+        sets make this a DFS count, not a product)."""
+        return sum(1 for _ in self.traces(limit))
+
+    def distinct_configs(self, limit: int = 1_000_000) -> int:
+        """Number of *distinct, postprocessor-valid* concrete kernel
+        configurations reachable — the honest space-size metric (nominal
+        trace counts overstate flat spaces whose scales clamp together)."""
+        seen = set()
+        for t in self.traces(limit):
+            p = self.validate(Schedule.fixed(**t))
+            if p.valid:
+                seen.add(config_key(p))
+        return len(seen)
+
+    @staticmethod
+    def from_flat(space: Mapping[str, tuple], workload: Workload | None = None,
+                  hw: HardwareConfig | None = None) -> "SpaceProgram":
+        """Wrap a flat ``{name: candidates}`` dict as a program of
+        independent categorical draws (v1 spaces, ad-hoc test spaces)."""
+        ins = [sample_categorical(name, tuple(cands))
+               for name, cands in space.items()]
+        return SpaceProgram(workload, hw, ins)
+
+    def __repr__(self):
+        kinds = ", ".join(f"{i.name}:{i.kind.split('_')[-1]}"
+                          for i in self.instructions)
+        return f"SpaceProgram({kinds})"
+
+
+def _contains(cands: tuple, value: Any) -> bool:
+    return value in cands
+
+
+def _snap(value: Any, cands: tuple) -> Any:
+    """Nearest candidate to a (numeric) proposal; exact match otherwise."""
+    if _contains(cands, value):
+        return value
+    if isinstance(value, (int, float)) and not isinstance(value, bool) and \
+            all(isinstance(c, (int, float)) and not isinstance(c, bool)
+                for c in cands):
+        return min(cands, key=lambda c: (abs(c - value), c))
+    return None
+
+
+# =============================================================================
+# Per-op-family program construction.
+# =============================================================================
+
+def _variant_names(workload: Workload, hw: HardwareConfig) -> tuple[str, ...]:
+    return tuple(v.name for v in intrinsics.variants_for(workload, hw))
+
+
+def _variant_block(workload: Workload, hw: HardwareConfig, name: str):
+    for v in intrinsics.variants_for(workload, hw):
+        if v.name == name:
+            return v.block
+    raise KeyError(f"variant {name} not registered for {workload.key()}")
+
+
+def _scaled(base: int, scale: float, align: int, cap: int) -> int:
+    b = max(align, int(base * scale) // align * align)
+    return min(b, max(align, round_up(cap, align)))
+
+
+def space_for(workload: Workload, hw: HardwareConfig) -> SpaceProgram:
+    """The generative design-space program of a workload on a hardware
+    config — the probabilistic program MetaSchedule would sample. Decisions
+    compose the intrinsic-variant choice (the paper's multi-VL registration)
+    with variant-conditioned perfect-tile splits, loop order, and the
+    k-split-conditioned accumulate-in-registers choice of Algorithm 1."""
+    names = _variant_names(workload, hw)
+    lane = hw.lane_align(workload.dtype)
+    sub = hw.sublane_align(workload.dtype)
+    block = lambda ctx: _variant_block(workload, hw, ctx["variant"])  # noqa: E731
+
+    def legacy_tile(scale_name: str, dim_index: int, extent: int, align: int):
+        """v1 ``*_scale`` decision -> concrete tile proposal, using the v1
+        formula against the *replayed* variant's base block (the trace's own
+        variant may be foreign and already resampled)."""
+        def hook(trace: Context, ctx: Context):
+            scale = trace.get(scale_name)
+            if scale is None:
+                return None
+            return _scaled(block(ctx)[dim_index], float(scale), align, extent)
+        return hook
+
+    ins = [sample_categorical("variant", names)]
+    if workload.op in ("matmul", "qmatmul"):
+        m, n, k = workload.dims
+        ins += [
+            sample_tile_split(
+                "bm", lambda ctx: tile_candidates(m, sub, block(ctx)[0]),
+                legacy=legacy_tile("m_scale", 0, m, sub)),
+            sample_tile_split(
+                "bn", lambda ctx: tile_candidates(n, lane, block(ctx)[1]),
+                legacy=legacy_tile("n_scale", 1, n, lane)),
+            sample_tile_split(
+                "bk", lambda ctx: tile_candidates(k, lane, block(ctx)[2]),
+                legacy=legacy_tile("k_scale", 2, k, lane)),
+            sample_categorical("order", ("mnk", "nmk")),
+            sample_categorical(
+                "accumulate",
+                lambda ctx: ((True,) if round_up(k, ctx["bk"]) == ctx["bk"]
+                             else (True, False))),
+        ]
+    elif workload.op == "gemv":
+        _n, k = workload.dims
+        ins += [
+            sample_tile_split(
+                "bk", lambda ctx: tile_candidates(k, lane, block(ctx)[1]),
+                legacy=legacy_tile("k_scale", 1, k, lane)),
+            sample_categorical(
+                "accumulate",
+                lambda ctx: ((True,) if round_up(k, ctx["bk"]) == ctx["bk"]
+                             else (True, False))),
+        ]
+    elif workload.op == "vmacc":
+        r, _c = workload.dims
+        ins += [
+            sample_tile_split(
+                "br", lambda ctx: tile_candidates(r, sub, block(ctx)[0]),
+                legacy=legacy_tile("r_scale", 0, r, sub)),
+        ]
+    elif workload.op == "attention":
+        pass  # the variant ladder is the whole space (block_q x block_kv)
+    else:
+        raise ValueError(f"unknown op {workload.op}")
+    return SpaceProgram(workload, hw, ins)
+
+
+def flat_space_v1(workload: Workload, hw: HardwareConfig) -> dict[str, tuple]:
+    """The pre-program flat decision space (independent categorical draws,
+    3-point SCALES tile grid). Kept for space-size comparisons and for
+    decoding what old databases were sampled from."""
+    names = _variant_names(workload, hw)
     if workload.op in ("matmul", "qmatmul"):
         return {
             "variant": names,
@@ -81,20 +467,36 @@ def space_for(workload: Workload, hw: HardwareConfig) -> dict[str, tuple]:
     raise ValueError(f"unknown op {workload.op}")
 
 
-def _variant_block(workload: Workload, hw: HardwareConfig, name: str):
-    for v in intrinsics.variants_for(workload, hw):
-        if v.name == name:
-            return v.block
-    raise KeyError(f"variant {name} not registered for {workload.key()}")
+def config_key(params: KernelParams) -> tuple:
+    """Identity of a concrete kernel configuration, for space-size counts.
+    ``accumulate`` is normalized away when there is a single reduction step
+    (the two forms lower to the same kernel behaviour)."""
+    acc = params.accumulate
+    if params.op in ("matmul", "qmatmul", "gemv") and params.grid[-1] == 1:
+        acc = True
+    return (params.op, params.block, params.grid, params.order, acc)
 
 
-def _scaled(base: int, scale: float, align: int, cap: int) -> int:
-    b = max(align, int(base * scale) // align * align)
-    return min(b, max(align, round_up(cap, align)))
+def v1_distinct_configs(workload: Workload, hw: HardwareConfig) -> int:
+    """Distinct valid concrete configurations of the v1 flat space (scale
+    clamping collapses many nominal traces onto one block shape)."""
+    return SpaceProgram.from_flat(flat_space_v1(workload, hw), workload,
+                                  hw).distinct_configs()
 
 
-def concretize(workload: Workload, hw: HardwareConfig,
-               schedule: Schedule) -> KernelParams:
+# =============================================================================
+# Concretization — trace -> KernelParams, for both trace layouts.
+# =============================================================================
+
+def concretize(workload: Workload, hw: HardwareConfig, schedule: Schedule,
+               postprocessors=DEFAULT_POSTPROCESSORS) -> KernelParams:
+    """Replay a schedule trace into concrete kernel parameters.
+
+    Supports both layouts: v2 program traces carry explicit tile decisions
+    (``bm``/``bn``/``bk``/``br``); v1 flat traces carry ``*_scale``
+    decisions interpreted against the variant's base block (the legacy
+    formula, unchanged — old database records concretize bit-identically).
+    """
     op, dims = workload.op, workload.dims
     ib = dtype_bytes(workload.dtype)
     ob = dtype_bytes(workload.out_dtype)
@@ -114,9 +516,13 @@ def concretize(workload: Workload, hw: HardwareConfig,
 
     if op in ("matmul", "qmatmul"):
         m, n, k = dims
-        bm = _scaled(base[0], schedule.get("m_scale", 1.0), sub, m)
-        bn = _scaled(base[1], schedule.get("n_scale", 1.0), lane, n)
-        bk = _scaled(base[2], schedule.get("k_scale", 1.0), lane, k)
+        if schedule.get("bm") is not None:  # v2 program trace
+            bm, bn, bk = (int(schedule["bm"]), int(schedule["bn"]),
+                          int(schedule["bk"]))
+        else:  # v1 flat trace
+            bm = _scaled(base[0], schedule.get("m_scale", 1.0), sub, m)
+            bn = _scaled(base[1], schedule.get("n_scale", 1.0), lane, n)
+            bk = _scaled(base[2], schedule.get("k_scale", 1.0), lane, k)
         pm, pn, pk = round_up(m, bm), round_up(n, bn), round_up(k, bk)
         grid_mn = (pm // bm, pn // bn)
         order = schedule.get("order", "mnk")
@@ -135,7 +541,10 @@ def concretize(workload: Workload, hw: HardwareConfig,
         bn = max(1, min(base[0], round_up(n, 1)))
         if bn > 1:
             bn = _scaled(base[0], 1.0, min(lane, base[0]), n)
-        bk = _scaled(base[1], schedule.get("k_scale", 1.0), lane, k)
+        if schedule.get("bk") is not None:  # v2 program trace
+            bk = int(schedule["bk"])
+        else:
+            bk = _scaled(base[1], schedule.get("k_scale", 1.0), lane, k)
         pn, pk = round_up(n, bn), round_up(k, bk)
         grid = (pn // bn, pk // bk)
         acc = bool(schedule.get("accumulate", True))
@@ -144,7 +553,10 @@ def concretize(workload: Workload, hw: HardwareConfig,
                               workload.dtype, workload.out_dtype, vmem, True)
     elif op == "vmacc":
         r, c = dims
-        br = _scaled(base[0], schedule.get("r_scale", 1.0), sub, r)
+        if schedule.get("br") is not None:  # v2 program trace
+            br = int(schedule["br"])
+        else:
+            br = _scaled(base[0], schedule.get("r_scale", 1.0), sub, r)
         bc = _scaled(base[1], 1.0, lane, c)
         pr, pc = round_up(r, br), round_up(c, bc)
         grid = (pr // br, pc // bc)
@@ -169,17 +581,7 @@ def concretize(workload: Workload, hw: HardwareConfig,
     else:
         raise ValueError(f"unknown op {op}")
 
-    # ---- validation (MetaSchedule postproc analogue) -------------------------
-    why = ""
-    if params.vmem_bytes > hw.vmem_capacity * 0.9:
-        why = (f"vmem footprint {params.vmem_bytes} exceeds 90% of "
-               f"{hw.vmem_capacity}")
-    for g in params.grid:
-        if g <= 0:
-            why = f"empty grid {params.grid}"
-    if why:
-        params = dataclasses.replace(params, valid=False, why_invalid=why)
-    return params
+    return apply_postprocessors(workload, hw, params, postprocessors)
 
 
 def instruction_census(workload: Workload, params: KernelParams) -> dict:

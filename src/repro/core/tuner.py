@@ -132,6 +132,8 @@ class TuneDriver:
         self.t_start = time.perf_counter()
         self._t_last: float | None = None
         self._started = False
+        # the generative design-space program (variant-conditioned tile
+        # splits, postprocessor pipeline) this search samples and replays
         self.space = space_lib.space_for(workload, hw)
         self.sampler = TraceSampler(seed)
         self.cost_model = RidgeCostModel()

@@ -43,24 +43,40 @@ def test_sampler_deterministic():
     assert a.names() == c.names()
 
 
-def test_mutation_changes_one_site():
+def test_mutation_replays_program_coherently():
+    """Mutation edits ≥1 site and re-executes the program: every decision in
+    the child is drawn from the candidate set valid *given its upstream
+    choices* (downstream sites may legitimately shift when a mutated variant
+    changes their candidate sets)."""
     wl = W.matmul(256, 512, 1024)
     space = space_for(wl, V5E)
     s = TraceSampler(0).sample(space)
     sampler = TraceSampler(1)
-    m = sampler.mutate(s, n_mutations=1)
+    m = sampler.mutate(space, s, n_mutations=1)
     diffs = [n for n in s.names() if s[n] != m[n]]
-    assert len(diffs) == 1
+    assert len(diffs) >= 1
+    for d in m.decisions:
+        assert d.choice in d.candidates
+        assert d.candidates == space.candidates(d.name, m.as_dict())
 
 
 def test_crossover_mixes_parents():
+    """Crossover aligns by decision name; inherited choices survive where
+    still coherent, and anything invalidated by the mixed upstream choices
+    is resampled from the refreshed candidate set (never silently kept)."""
     wl = W.matmul(256, 512, 1024)
     space = space_for(wl, V5E)
     smp = TraceSampler(3)
     a, b = smp.sample(space), smp.sample(space)
-    child = smp.crossover(a, b)
-    for name in child.names():
-        assert child[name] in (a[name], b[name])
+    child = smp.crossover(space, a, b)
+    assert child["variant"] in (a["variant"], b["variant"])
+    for d in child.decisions:
+        assert d.choice in d.candidates
+        if d.choice not in (a.get(d.name), b.get(d.name)):
+            # only resampled because the inherited choice stopped being
+            # legal under the mixed upstream decisions
+            assert (a.get(d.name) not in d.candidates
+                    or b.get(d.name) not in d.candidates)
 
 
 @settings(max_examples=30, deadline=None)

@@ -98,10 +98,11 @@ def test_subprocess_runner_timeout_yields_invalid_and_slot_survives():
 def _valid_samples(wl, hw, n, seed=0):
     space = space_for(wl, hw)
     sampler = TraceSampler(seed)
-    out = []
+    out, tries = [], 0
     while len(out) < n:
         s = sampler.sample(space)
-        if concretize(wl, hw, s).valid and s not in out:
+        tries += 1
+        if concretize(wl, hw, s).valid and (s not in out or tries > 50 * n):
             out.append(s)
     return out
 

@@ -19,12 +19,16 @@ from repro.core.space import instruction_census
 
 
 def _samples(wl, hw, n, seed=0):
+    """n valid samples, unique when the space is large enough (a generative
+    program collapses v1's clamp-duplicated traces, so tiny workloads can
+    have fewer than n distinct traces — then duplicates are fine)."""
     space = space_for(wl, hw)
     sampler = TraceSampler(seed)
-    out = []
+    out, tries = [], 0
     while len(out) < n:
         s = sampler.sample(space)
-        if concretize(wl, hw, s).valid and s not in out:
+        tries += 1
+        if concretize(wl, hw, s).valid and (s not in out or tries > 50 * n):
             out.append(s)
     return out
 
