@@ -29,11 +29,11 @@ sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import nets
-from repro.core import (AnalyticRunner, InterpretRunner, TuningDatabase,
-                        TuningSession, V5E, V5E_MXU256, V5E_VMEM32,
-                        V5E_VMEM64, INTERPRET, concretize,
-                        fixed_library_schedule, space_for, tune,
-                        v1_distinct_configs, xla_latency)
+from repro.core import (AnalyticRunner, Fault, InterpretRunner,
+                        TuningDatabase, TuningSession, V5E, V5E_MXU256,
+                        V5E_VMEM32, V5E_VMEM64, INTERPRET, concretize,
+                        fixed_library_schedule, simulated_farm, space_for,
+                        tune, v1_distinct_configs, xla_latency)
 from repro.core.space import instruction_census
 from repro.core import workload as W
 
@@ -234,6 +234,129 @@ def space_cardinality() -> None:
                 f"than the v1 flat space ({v1})")
 
 
+# ------------------------------------------------------------- board farm ----
+
+def _candidate_population(wl, hw, limit=16):
+    """Up to ``limit`` distinct valid schedules for one workload (the
+    candidate batch its tuning task would send to the boards)."""
+    from repro.core import TraceSampler
+
+    space = space_for(wl, hw)
+    sampler = TraceSampler(0)
+    out, sigs = [], set()
+    for _ in range(200 * limit):
+        s = sampler.sample(space)
+        if len(out) >= limit:
+            break
+        if concretize(wl, hw, s).valid and s.signature() not in sigs:
+            sigs.add(s.signature())
+            out.append(s)
+    return out
+
+
+def farm_suite(trials: int = 4) -> None:
+    """Measurement-farm scaling on the net-interp suite models (bert-tiny +
+    anomaly-detection). Simulated boards with a 50 ms per-candidate delay
+    stand in for the paper's 9-12 s FPGA measurements; latencies are
+    deterministic (analytic), so every farm size measures identical
+    candidates and the wall-time delta is pure dispatch.
+
+    Rows: (1) per-task batch measurement of each workload's candidate
+    population — the farm's core operation; wall-time must fall >= 1.5x
+    at 4 boards vs 1 (the CI farm smoke asserts it); (2) the full
+    TuningSession through the farm (wall / utilization / requeues /
+    overlap); (3) the same session with one board dying mid-run."""
+    from repro.core import dedup_workloads
+
+    ops = (list(nets.NETWORKS["bert-tiny"]())
+           + list(nets.NETWORKS["anomaly-detection"]()))
+    unique = dedup_workloads(ops)
+    delay_s = 0.05
+    pops = [(wl, _candidate_population(wl, V5E)) for _, wl in unique]
+    n_cands = sum(len(p) for _, p in pops)
+    # (1) batch measurement of the candidate populations, per board count
+    walls: dict[int, float] = {}
+    for n_boards in (1, 2, 4):
+        farm = simulated_farm(n_boards, V5E, delay_s=delay_s,
+                              straggler_timeout_s=30.0)
+        t0 = time.perf_counter()
+        for wl, pop in pops:
+            farm.run_batch(wl, pop)
+        walls[n_boards] = time.perf_counter() - t0
+        summary = farm.farm_summary()
+        utils = [b["utilization"] for b in summary["boards"].values()]
+        emit(f"farm/boards{n_boards}/measure_wall",
+             walls[n_boards] * 1e6,
+             f"speedup_vs_1board={walls[1] / walls[n_boards]:.2f}x "
+             f"candidates={n_cands} mean_util={np.mean(utils):.2f}")
+    assert walls[1] / walls[4] >= 1.5, (
+        f"farm scaling regressed: 4 boards only "
+        f"{walls[1] / walls[4]:.2f}x faster than 1")
+    # (2) end-to-end tuning session through the farm
+    budget = trials * len(unique)
+    for n_boards in (1, 4):
+        farm = simulated_farm(n_boards, V5E, delay_s=delay_s,
+                              straggler_timeout_s=30.0)
+        res = TuningSession(V5E, farm, database=TuningDatabase()).tune_model(
+            ops, total_trials=budget, seed=0, model="farm-net-interp")
+        summary = res.board_stats
+        utils = [b["utilization"] for b in summary["boards"].values()]
+        emit(f"farm/session_boards{n_boards}/tune_wall",
+             res.wall_time_s * 1e6,
+             f"trials={res.total_trials} mean_util={np.mean(utils):.2f} "
+             f"overlap={res.overlap_fraction:.2f} "
+             f"requeues={summary['requeues']}")
+    # (3) fault tolerance at benchmark scale: one of four boards dies
+    # mid-run, the survivors absorb its candidates, results stay complete
+    farm = simulated_farm(4, V5E, delay_s=delay_s,
+                          faults={0: [Fault(batch=3, kind="die")]},
+                          straggler_timeout_s=30.0)
+    res = TuningSession(V5E, farm, database=TuningDatabase()).tune_model(
+        ops, total_trials=budget, seed=0, model="farm-faulty")
+    summary = res.board_stats
+    emit("farm/session_boards4_one_dies/tune_wall", res.wall_time_s * 1e6,
+         f"trials={res.total_trials} "
+         f"requeues={summary['requeues']} "
+         f"invalid_after_retries={summary['invalid_after_retries']}")
+
+
+# ---------------------------------------------------- cross-hw transfer ----
+
+def transfer_study(trials: int = 16) -> None:
+    """ROADMAP cross-hardware transfer study (paper Fig. 4 at scale): seed
+    a database by tuning a shape set on v5e, then sweep every hardware
+    config, reporting the warm-start hit rate — the fraction of transferred
+    records that concretize valid on the target — and warm-vs-cold best
+    latency at equal trial budget."""
+    shapes = [
+        W.matmul(512, 512, 512, "bfloat16"),
+        W.matmul(1024, 1024, 1024, "bfloat16"),
+        W.qmatmul(512, 512, 512),
+        W.gemv(2048, 8192, "bfloat16"),
+    ]
+    db = TuningDatabase()
+    for wl in shapes:
+        tune(wl, V5E, AnalyticRunner(V5E), trials=trials, seed=0,
+             database=db)
+    for hw in (V5E_VMEM32, V5E_VMEM64, V5E, V5E_MXU256):
+        usable = requested = measured = 0
+        ratios = []
+        for wl in shapes:
+            seeds = db.transfer_candidates(wl, hw.name, limit=4)
+            requested += len(seeds)
+            usable += sum(1 for s in seeds if concretize(wl, hw, s).valid)
+            runner = AnalyticRunner(hw)
+            warm = tune(wl, hw, runner, trials=trials, seed=1,
+                        warm_start=seeds)
+            cold = tune(wl, hw, runner, trials=trials, seed=1)
+            measured += warm.warm_started
+            ratios.append(cold.best_latency / warm.best_latency)
+        hit = usable / max(requested, 1)
+        emit(f"transfer/{hw.name}/warm_start_hit_rate", hit * 100,
+             f"usable={usable}/{requested} measured={measured} "
+             f"warm_vs_cold={np.mean(ratios):.3f}x")
+
+
 # --------------------------------------------------------- session report ----
 
 def session_report(db: TuningDatabase) -> list[tuple[str, float, str]]:
@@ -350,6 +473,8 @@ SUITES = {
     "trace": trace_analysis,
     "networks": networks,
     "tuning_cost": tuning_cost,
+    "farm": farm_suite,
+    "transfer": transfer_study,
 }
 
 _NO_TRIALS_ARG = ("tuning_cost", "space")

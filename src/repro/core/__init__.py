@@ -18,6 +18,9 @@ from repro.core.cost_model import RidgeCostModel, features
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
                                xla_latency)
 from repro.core.measure_pool import MeasurePool, SubprocessRunner
+from repro.core.board_farm import (Board, BoardDied, BoardFarm, BoardStats,
+                                   Fault, FarmDead, LocalBoard,
+                                   SimulatedBoard, simulated_farm)
 from repro.core.database import (TuningDatabase, global_database,
                                  reset_global_database)
 from repro.core.tuner import tune, TuneDriver, TuneResult
@@ -33,6 +36,8 @@ __all__ = [
     "KernelParams", "SpaceProgram", "flat_space_v1", "tile_candidates",
     "v1_distinct_configs", "TraceSampler", "RidgeCostModel", "features",
     "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
+    "Board", "BoardDied", "BoardFarm", "BoardStats", "Fault", "FarmDead",
+    "LocalBoard", "SimulatedBoard", "simulated_farm",
     "run_batch", "xla_latency",
     "TuningDatabase", "global_database", "reset_global_database",
     "tune", "TuneDriver", "TuneResult",

@@ -1,0 +1,512 @@
+"""Multi-board measurement farm — the paper's RPC board pool as a Runner.
+
+The paper measures candidates on a *farm* of FPGA-implemented RISC-V SoCs
+reached over RPC: an AutoTVM-style tracker hands each measure batch to
+whichever board is free, boards take 9-12 s per candidate, and boards drop
+off the farm (bitstream reload, power glitch, wedged runtime) without
+warning. The mapping here:
+
+- :class:`Board`          ~ one FPGA SoC behind its RPC server: a name, a
+  :class:`~repro.core.hardware.HardwareConfig`, a dispatch capacity, and a
+  health state the farm flips when the board misbehaves.
+- :class:`LocalBoard`     ~ a board whose "RPC server" is a local
+  :class:`~repro.core.measure_pool.MeasurePool` (process-isolated interpret
+  measurement with a true per-candidate kill).
+- :class:`SimulatedBoard` ~ an in-process board with *scriptable* latency
+  and failure behaviour (die mid-batch, hang past the deadline, return
+  garbage, come back after a respawn) — the harness the fault-injection and
+  determinism tests drive without hardware.
+- :class:`BoardFarm`      ~ the tracker: shards a candidate batch across the
+  boards with work-stealing dispatch (an idle board pulls the next shard
+  from one shared queue, so fast boards naturally absorb more work),
+  enforces a per-board straggler deadline, requeues the candidates of a
+  dead or abandoned board onto the survivors (bounded retries, then
+  ``INVALID``), and reconciles results in **submission order**.
+
+Determinism: ``run_batch`` returns latencies aligned with the submitted
+schedules, and each candidate's latency is a function of the candidate
+alone (every board measures against the same farm hardware config), so a
+fixed tuner seed replays bit-identically regardless of which board finished
+first, how the shards were stolen, or how often a flaky board died.
+``BoardFarm`` declares ``overlap_capable = True`` and satisfies the
+``Runner`` protocol, so it drops into :func:`~repro.core.tuner.tune` and
+:class:`~repro.core.session.TuningSession` unchanged; per-board utilization
+and requeue counts surface through :meth:`BoardFarm.farm_summary` into
+``TuneResult.board_stats`` and session summaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Sequence
+
+from repro.core.hardware import HardwareConfig
+from repro.core.runner import INVALID
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+
+class BoardDied(RuntimeError):
+    """A board failed mid-batch (crash, RPC drop, scripted death)."""
+
+
+class FarmDead(RuntimeError):
+    """Every board is dead and unmeasured candidates remain — surfaced as an
+    error so the tuner's FIFO queue fails fast instead of deadlocking."""
+
+
+@dataclasses.dataclass
+class BoardStats:
+    """Per-board counters the farm maintains across ``run_batch`` calls."""
+
+    dispatched: int = 0  # candidates handed to the board
+    completed: int = 0  # candidates whose latencies were accepted
+    requeued: int = 0  # candidates taken back (death / straggler)
+    deaths: int = 0  # times the farm declared the board dead
+    respawns: int = 0  # successful revivals after a death
+    busy_s: float = 0.0  # wall-clock the board spent holding a shard
+
+
+class Board:
+    """One measurement target of the farm.
+
+    ``capacity`` bounds the shard size one dispatch hands the board (the
+    paper's boards measure one candidate at a time; a MeasurePool-backed
+    board takes one per worker). ``timeout_s`` optionally overrides the
+    farm's straggler deadline for this board alone (a slow-but-honest FPGA
+    vs a fast simulator).
+    """
+
+    def __init__(self, name: str, hw: HardwareConfig, capacity: int = 1,
+                 timeout_s: float | None = None):
+        self.name = name
+        self.hw = hw
+        self.capacity = max(1, int(capacity))
+        self.timeout_s = timeout_s
+        self.healthy = True
+        self.stats = BoardStats()
+
+    def measure(self, workload: Workload,
+                schedules: Sequence[Schedule]) -> list[float]:
+        """Latencies aligned with ``schedules``; raise :class:`BoardDied`
+        when the board itself (not a candidate) fails."""
+        raise NotImplementedError
+
+    def abandon(self) -> None:
+        """Farm gave up on the in-flight shard: wake/unblock a hung measure
+        if the board can (best effort; the dispatch thread is daemonized)."""
+
+    def respawn(self) -> bool:
+        """Try to revive a dead board; True if it may serve again."""
+        return False
+
+    def close(self) -> None:
+        """Release board resources."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scripted misbehaviour of a :class:`SimulatedBoard`.
+
+    ``batch`` is the 0-based ordinal of the batch *on that board*; ``kind``
+    is ``"die"`` (measure ``after`` candidates, then fail the shard),
+    ``"hang"`` (block until abandoned, up to ``value`` seconds), or
+    ``"garbage"`` (return ``value`` as every latency).
+    """
+
+    batch: int
+    kind: str  # "die" | "hang" | "garbage"
+    value: float = 0.0  # garbage latency / max hang seconds
+    after: int = 0  # "die": candidates measured before the death
+
+
+class SimulatedBoard(Board):
+    """In-process board with scriptable latency and failure behaviour.
+
+    Measurement is deterministic by default — each candidate's latency comes
+    from ``measure_fn`` (an :class:`~repro.core.runner.AnalyticRunner` over
+    this board's hardware config unless overridden) — while ``delay_s``
+    (a float, or a callable of the batch ordinal: a latency *script*)
+    controls only how long the board pretends to take, and ``faults``
+    injects failures. Wall-clock behaviour therefore varies per board; the
+    returned values do not, which is exactly the property the farm's
+    determinism guarantee rests on.
+    """
+
+    def __init__(self, name: str, hw: HardwareConfig, capacity: int = 1,
+                 timeout_s: float | None = None,
+                 delay_s: float | Callable[[int], float] = 0.0,
+                 faults: Sequence[Fault] = (),
+                 measure_fn: Callable[[Workload, Schedule], float] | None = None,
+                 respawns: int = 0):
+        super().__init__(name, hw, capacity, timeout_s)
+        self.delay_s = delay_s
+        self._faults = {f.batch: f for f in faults}
+        self._measure_fn = measure_fn
+        self._respawn_budget = respawns
+        self._abandoned = threading.Event()
+        self._batch_no = 0
+        self.log: list[tuple[int, int, str]] = []  # (batch, n, status)
+
+    def _latency(self, workload: Workload, schedule: Schedule) -> float:
+        if self._measure_fn is None:
+            from repro.core.runner import AnalyticRunner
+
+            self._measure_fn = AnalyticRunner(self.hw).run
+        return self._measure_fn(workload, schedule)
+
+    def measure(self, workload: Workload,
+                schedules: Sequence[Schedule]) -> list[float]:
+        batch = self._batch_no
+        self._batch_no += 1
+        fault = self._faults.get(batch)
+        delay = (self.delay_s(batch) if callable(self.delay_s)
+                 else self.delay_s)
+        if fault is not None and fault.kind == "hang":
+            self.log.append((batch, len(schedules), "hang"))
+            # block like a wedged RPC call; the farm's straggler deadline
+            # abandons us, abandon() sets the event, and we fail promptly
+            # instead of pinning the dispatch thread for the full hang
+            self._abandoned.wait(timeout=fault.value or 60.0)
+            raise BoardDied(f"{self.name}: batch {batch} hung")
+        if delay:
+            time.sleep(delay)
+        if fault is not None and fault.kind == "die":
+            for s in schedules[:fault.after]:
+                self._latency(workload, s)  # work wasted by the death
+            self.log.append((batch, len(schedules), "die"))
+            raise BoardDied(f"{self.name}: died on batch {batch}")
+        lats = [self._latency(workload, s) for s in schedules]
+        if fault is not None and fault.kind == "garbage":
+            self.log.append((batch, len(schedules), "garbage"))
+            return [fault.value] * len(lats)
+        self.log.append((batch, len(schedules), "ok"))
+        return lats
+
+    def abandon(self) -> None:
+        self._abandoned.set()
+
+    def respawn(self) -> bool:
+        if self._respawn_budget <= 0:
+            return False
+        self._respawn_budget -= 1
+        # a fresh event: the abandoned (set) one keeps any still-waking hang
+        # thread unblocked, while post-respawn hangs block anew
+        self._abandoned = threading.Event()
+        return True
+
+    def close(self) -> None:
+        self._abandoned.set()
+
+
+class LocalBoard(Board):
+    """A board whose measurement host is a local :class:`MeasurePool`.
+
+    Candidates are built and timed in the pool's persistent worker
+    processes (interpret mode), so a wedged candidate is killed by the pool
+    inside the board — per-candidate failures surface as ``INVALID``
+    latencies, and only a board-level failure (no worker can be started)
+    raises :class:`BoardDied`. ``respawn`` rebuilds the pool from scratch.
+    """
+
+    def __init__(self, name: str, hw: HardwareConfig, workers: int = 1,
+                 timeout_s: float | None = None, repeats: int = 3,
+                 warmup: int = 1, candidate_timeout_s: float = 60.0,
+                 mp_context: str = "spawn",
+                 task: Callable[[Any], Any] | None = None):
+        super().__init__(name, hw, capacity=max(1, workers),
+                         timeout_s=timeout_s)
+        from repro.core import measure_pool as mp_lib
+
+        self.repeats = repeats
+        self.warmup = warmup
+        self.candidate_timeout_s = candidate_timeout_s
+        self.mp_context = mp_context
+        self._task = task if task is not None else mp_lib._measure_candidate
+        self._default_task = mp_lib._measure_candidate
+        self._pool: Any = None
+
+    def _ensure_pool(self):
+        from repro.core import measure_pool as mp_lib
+
+        if self._pool is None:
+            init = (mp_lib._worker_warmup
+                    if self._task is self._default_task else None)
+            self._pool = mp_lib.MeasurePool(
+                self._task, workers=self.capacity,
+                timeout_s=self.candidate_timeout_s,
+                mp_context=self.mp_context, initializer=init)
+        return self._pool
+
+    def measure(self, workload: Workload,
+                schedules: Sequence[Schedule]) -> list[float]:
+        pool = self._ensure_pool()
+        payloads = [(self.hw, workload, s, self.repeats, self.warmup)
+                    for s in schedules]
+        outcomes = pool.run_many(payloads)
+        if outcomes and all(o.status == "crash" and not o.elapsed_s
+                            for o in outcomes):
+            # nothing ever ran: the host itself is down, not the candidates
+            raise BoardDied(f"{self.name}: no pool worker could run")
+        return [float(o.value) if o.ok and isinstance(o.value, (int, float))
+                else INVALID for o in outcomes]
+
+    def respawn(self) -> bool:
+        self.close()
+        return True
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
+
+
+class BoardFarm:
+    """Shard candidate batches across a pool of boards (the paper's tracker).
+
+    Satisfies the ``Runner`` protocol (``run``/``run_batch``/``name``/
+    ``hw``) and declares ``overlap_capable``, so the tuner pipeline and
+    interleaved sessions treat the farm exactly like a single slow board —
+    the fan-out is entirely inside ``run_batch``:
+
+    - **work stealing** — one shared queue; every idle healthy board is
+      handed the next ``capacity`` candidates, so a fast board that
+      finishes early simply pulls again while a slow one still holds its
+      first shard;
+    - **stragglers** — a board that holds a shard past its deadline
+      (``straggler_timeout_s`` or the board's own ``timeout_s``) is
+      abandoned and declared dead; its dispatch thread is daemonized and
+      its late result, should it ever arrive, is dropped by token;
+    - **requeue** — candidates of a dead/abandoned board go back on the
+      queue for the survivors, at most ``max_retries`` times each, then
+      ``INVALID`` (a candidate that kills every board it touches must not
+      circle forever);
+    - **respawn** — a dead board gets up to ``max_respawns`` revival
+      attempts (``Board.respawn``); until one succeeds it takes no work;
+    - **reconciliation** — results land in submission order (aligned with
+      the input), so the search trajectory is independent of completion
+      order;
+    - **clean failure** — if every board is dead and candidates remain,
+      :class:`FarmDead` is raised instead of blocking the FIFO queue.
+    """
+
+    overlap_capable = True
+
+    def __init__(self, boards: Sequence[Board], hw: HardwareConfig | None = None,
+                 name: str = "farm", max_retries: int = 2,
+                 straggler_timeout_s: float = 60.0, max_respawns: int = 1):
+        boards = list(boards)
+        if not boards:
+            raise ValueError("a BoardFarm needs at least one board")
+        names = [b.name for b in boards]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate board names: {names}")
+        self.boards = boards
+        self.hw = hw if hw is not None else boards[0].hw
+        self.name = name
+        self.max_retries = max(0, int(max_retries))
+        self.straggler_timeout_s = straggler_timeout_s
+        self._respawns_left = {b.name: max(0, int(max_respawns))
+                               for b in boards}
+        # farm-level counters, cumulative across run_batch calls
+        self.requeues = 0  # candidate requeue events
+        self.retry_exhausted = 0  # candidates INVALID after max_retries
+        self.garbage_sanitized = 0  # non-physical latencies mapped to INVALID
+        self._wall_s = 0.0  # time spent inside run_batch
+        self._tokens = itertools.count()
+        self._done: queue.Queue = queue.Queue()  # (token, status, payload)
+
+    # ---- runner protocol -------------------------------------------------------
+    def run(self, workload: Workload, schedule: Schedule) -> float:
+        return self.run_batch(workload, [schedule])[0]
+
+    def run_batch(self, workload: Workload,
+                  schedules: Sequence[Schedule]) -> list[float]:
+        t0 = time.monotonic()
+        try:
+            return self._run(workload, list(schedules))
+        finally:
+            self._wall_s += time.monotonic() - t0
+
+    # ---- dispatch machinery ----------------------------------------------------
+    def _board_thread(self, token: int, board: Board, workload: Workload,
+                      schedules: list[Schedule]) -> None:
+        try:
+            lats = board.measure(workload, schedules)
+        except BoardDied as e:
+            self._done.put((token, "died", str(e)))
+        except Exception as e:  # any other escape is a board bug, not fatal
+            self._done.put((token, "died", f"{type(e).__name__}: {e}"))
+        else:
+            self._done.put((token, "ok", lats))
+
+    def _sanitize(self, lat: Any) -> float:
+        """Latencies must be physical: strictly positive (or the runner's
+        own ``INVALID`` = inf). Garbage (NaN, zero, negatives, non-numbers)
+        becomes ``INVALID`` — a bad reading must never poison the cost
+        model, and a zero in particular would otherwise be an unbeatable
+        fake best that ranks first in the database forever."""
+        try:
+            lat = float(lat)
+        except (TypeError, ValueError):
+            lat = float("nan")
+        if math.isnan(lat) or lat <= 0:
+            self.garbage_sanitized += 1
+            return INVALID
+        return lat
+
+    def _run(self, workload: Workload,
+             schedules: list[Schedule]) -> list[float]:
+        n = len(schedules)
+        if n == 0:
+            return []
+        results: list[float | None] = [None] * n
+        todo: deque[tuple[int, int]] = deque((i, 0) for i in range(n))
+        # token -> (board, shard, t0, deadline); shard = [(idx, attempts)]
+        inflight: dict[int, tuple[Board, list[tuple[int, int]], float,
+                                  float]] = {}
+        busy: set[str] = set()
+
+        def dispatch() -> None:
+            for board in self.boards:
+                if not todo:
+                    return
+                if not board.healthy or board.name in busy:
+                    continue
+                shard = [todo.popleft()
+                         for _ in range(min(board.capacity, len(todo)))]
+                token = next(self._tokens)
+                board.stats.dispatched += len(shard)
+                busy.add(board.name)
+                now = time.monotonic()
+                deadline = now + (board.timeout_s
+                                  if board.timeout_s is not None
+                                  else self.straggler_timeout_s)
+                inflight[token] = (board, shard, now, deadline)
+                threading.Thread(
+                    target=self._board_thread, daemon=True,
+                    name=f"board-{board.name}",
+                    args=(token, board, workload,
+                          [schedules[i] for i, _ in shard])).start()
+
+        def requeue(board: Board, shard: list[tuple[int, int]]) -> None:
+            for idx, attempts in shard:
+                board.stats.requeued += 1
+                if attempts + 1 > self.max_retries:
+                    results[idx] = INVALID
+                    self.retry_exhausted += 1
+                else:
+                    self.requeues += 1
+                    todo.append((idx, attempts + 1))
+
+        def board_down(board: Board) -> None:
+            board.healthy = False
+            board.stats.deaths += 1
+            board.abandon()
+            if self._respawns_left.get(board.name, 0) > 0:
+                self._respawns_left[board.name] -= 1
+                if board.respawn():
+                    board.stats.respawns += 1
+                    board.healthy = True
+
+        dispatch()
+        while todo or inflight:
+            if not inflight:
+                if not any(b.healthy for b in self.boards):
+                    raise FarmDead(
+                        f"all {len(self.boards)} boards dead with "
+                        f"{len(todo)} candidates unmeasured")
+                dispatch()
+                continue
+            timeout = max(0.0, min(dl for _, _, _, dl in inflight.values())
+                          - time.monotonic())
+            try:
+                token, status, payload = self._done.get(timeout=timeout)
+            except queue.Empty:
+                token = None
+            if token is not None and token in inflight:
+                board, shard, t_disp, _ = inflight.pop(token)
+                busy.discard(board.name)
+                board.stats.busy_s += time.monotonic() - t_disp
+                if status == "ok" and len(payload) == len(shard):
+                    for (idx, _), lat in zip(shard, payload):
+                        results[idx] = self._sanitize(lat)
+                        board.stats.completed += 1
+                else:  # board died, errored, or violated the protocol
+                    requeue(board, shard)
+                    board_down(board)
+            # late messages for abandoned tokens fall through and are dropped
+            now = time.monotonic()
+            for token in [t for t, (_, _, _, dl) in inflight.items()
+                          if dl <= now]:
+                board, shard, t_disp, _ = inflight.pop(token)
+                busy.discard(board.name)
+                board.stats.busy_s += now - t_disp
+                requeue(board, shard)
+                board_down(board)
+            dispatch()
+        return [lat if lat is not None else INVALID for lat in results]
+
+    # ---- reporting / lifecycle -------------------------------------------------
+    def farm_summary(self) -> dict:
+        """Per-board utilization and requeue counters (cumulative), the
+        payload ``TuneResult.board_stats`` and session summaries carry."""
+        wall = self._wall_s
+        return {
+            "boards": {b.name: {
+                "hw": b.hw.name,
+                "healthy": b.healthy,
+                "dispatched": b.stats.dispatched,
+                "completed": b.stats.completed,
+                "requeued": b.stats.requeued,
+                "deaths": b.stats.deaths,
+                "respawns": b.stats.respawns,
+                "busy_s": b.stats.busy_s,
+                "utilization": (b.stats.busy_s / wall) if wall > 0 else 0.0,
+            } for b in self.boards},
+            "requeues": self.requeues,
+            "invalid_after_retries": self.retry_exhausted,
+            "garbage_sanitized": self.garbage_sanitized,
+            "measure_wall_s": wall,
+        }
+
+    def close(self) -> None:
+        for board in self.boards:
+            board.abandon()
+            board.close()
+
+    def __enter__(self) -> "BoardFarm":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def simulated_farm(n_boards: int, hw: HardwareConfig,
+                   delay_s: float | Sequence[float] = 0.0,
+                   capacity: int = 1,
+                   faults: dict[int, Sequence[Fault]] | None = None,
+                   respawns: dict[int, int] | None = None,
+                   measure_fn: Callable[[Workload, Schedule], float] | None = None,
+                   **farm_kwargs) -> BoardFarm:
+    """Farm of ``n_boards`` deterministic simulated boards (benchmarks and
+    tests). ``delay_s`` may be one float or a per-board sequence (each
+    entry a float or a per-batch latency-script callable); ``faults`` and
+    ``respawns`` map board index -> fault script / respawn budget."""
+    delays = (list(delay_s) if isinstance(delay_s, (list, tuple))
+              else [delay_s] * n_boards)
+    if len(delays) != n_boards:
+        raise ValueError("delay_s sequence must match n_boards")
+    boards = [SimulatedBoard(f"sim{i}", hw, capacity=capacity,
+                             delay_s=delays[i],
+                             faults=(faults or {}).get(i, ()),
+                             respawns=(respawns or {}).get(i, 0),
+                             measure_fn=measure_fn)
+              for i in range(n_boards)]
+    return BoardFarm(boards, **farm_kwargs)

@@ -38,6 +38,7 @@ import dataclasses
 import multiprocessing as mp
 import multiprocessing.connection
 import os
+import threading
 import time
 from collections import deque
 from typing import Any, Callable, Sequence
@@ -130,19 +131,33 @@ class _Worker:
         return self.ready
 
     def kill(self) -> None:
+        """Hard stop; safe to call repeatedly and concurrently with
+        ``close`` (kill/close on an already-dead process or an
+        already-closed pipe are no-ops)."""
         try:
             self.proc.kill()
             self.proc.join(timeout=5.0)
+        except (ValueError, OSError, AssertionError):
+            pass  # process already closed/reaped by a concurrent teardown
         finally:
-            self.conn.close()
+            try:
+                self.conn.close()
+            except OSError:
+                pass
 
     def close(self) -> None:
         """Graceful shutdown: closing the pipe EOFs the worker loop."""
-        self.conn.close()
-        self.proc.join(timeout=1.0)
-        if self.proc.is_alive():
-            self.proc.kill()
-            self.proc.join(timeout=5.0)
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        try:
+            self.proc.join(timeout=1.0)
+            if self.proc.is_alive():
+                self.proc.kill()
+                self.proc.join(timeout=5.0)
+        except (ValueError, OSError, AssertionError):
+            pass
 
 
 class MeasurePool:
@@ -166,20 +181,37 @@ class MeasurePool:
         self.ctx = mp.get_context(mp_context)
         self._pool: list[_Worker | None] = [None] * self.workers
         self.restarts = 0  # workers killed (timeout) or lost (crash)
+        # Worker-slot mutations (retire/launch/close) are serialized so that
+        # close() — including the GC-driven __del__ path, which can run on
+        # another thread while run_many is mid-respawn — can never interleave
+        # with a respawn and leak the freshly-spawned worker.
+        self._lock = threading.RLock()
+        self._closed = False
 
     # ---- lifecycle -------------------------------------------------------------
     def _retire(self, i: int) -> None:
-        w = self._pool[i]
-        if w is not None:
-            w.kill()
-        self._pool[i] = None
-        self.restarts += 1
+        with self._lock:
+            w = self._pool[i]
+            if w is not None:
+                w.kill()
+            self._pool[i] = None
+            self.restarts += 1
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def close(self) -> None:
-        for i, w in enumerate(self._pool):
-            if w is not None:
-                w.close()
-            self._pool[i] = None
+        """Idempotent, safe under concurrent kill/respawn: after the flag is
+        set no slot can spawn a new worker, so nothing closed here can come
+        back, and a racing ``run_many`` drains its remaining payloads as
+        ``crash`` outcomes instead of touching retired slots."""
+        with self._lock:
+            self._closed = True
+            for i, w in enumerate(self._pool):
+                if w is not None:
+                    w.close()
+                self._pool[i] = None
 
     def __enter__(self) -> "MeasurePool":
         return self
@@ -203,6 +235,9 @@ class MeasurePool:
         respawn can never delay the deadline kill of a different worker."""
         payloads = list(payloads)
         outcomes: list[TaskOutcome | None] = [None] * len(payloads)
+        if self._closed:
+            return [TaskOutcome("crash", error="pool closed")
+                    for _ in payloads]
         queue = deque(enumerate(payloads))
         active: dict[int, tuple[int, float, float]] = {}  # slot -> (idx, deadline, t0)
         booting: dict[int, float] = {}  # slot -> spawn deadline
@@ -212,14 +247,18 @@ class MeasurePool:
         def launch(slot: int) -> None:
             """(Re)spawn slot's worker without blocking; give up on the slot
             after repeated spawn failures so a broken task/initializer can't
-            respawn forever."""
-            if spawn_fails[slot] >= 2:
-                return
-            w = self._pool[slot]
-            if w is not None:
-                w.kill()
-            self._pool[slot] = _Worker(self.ctx, self.task, self.initializer)
-            booting[slot] = time.monotonic() + self.spawn_timeout_s
+            respawn forever. Under the lifecycle lock (and a no-op once the
+            pool is closed) so a concurrent close() can never race a respawn
+            and strand the new worker."""
+            with self._lock:
+                if self._closed or spawn_fails[slot] >= 2:
+                    return
+                w = self._pool[slot]
+                if w is not None:
+                    w.kill()
+                self._pool[slot] = _Worker(self.ctx, self.task,
+                                           self.initializer)
+                booting[slot] = time.monotonic() + self.spawn_timeout_s
 
         for slot in range(min(self.workers, len(payloads))):
             w = self._pool[slot]
@@ -232,11 +271,14 @@ class MeasurePool:
                 launch(slot)
 
         def dispatch() -> None:
-            while queue and idle:
+            while queue and idle and not self._closed:
                 slot = idle.popleft()
+                w = self._pool[slot]
+                if w is None:  # slot torn down by a concurrent close()
+                    continue
                 idx, payload = queue.popleft()
                 try:
-                    self._pool[slot].conn.send(payload)
+                    w.conn.send(payload)
                 except (BrokenPipeError, OSError):
                     # worker died between tasks: requeue, respawn the slot
                     queue.appendleft((idx, payload))
@@ -248,6 +290,19 @@ class MeasurePool:
 
         dispatch()
         while queue or active:
+            if self._closed:
+                # a concurrent close() tore the workers down: drain instead
+                # of touching retired slots (results for payloads already
+                # dispatched are unknowable — their workers are gone)
+                while queue:
+                    idx, _ = queue.popleft()
+                    outcomes[idx] = TaskOutcome("crash", error="pool closed")
+                for idx, _, t0 in active.values():
+                    outcomes[idx] = TaskOutcome(
+                        "crash", elapsed_s=time.monotonic() - t0,
+                        error="pool closed")
+                active.clear()
+                break
             if not active and not booting and not idle:
                 # no worker running, coming up, or available: the remaining
                 # payloads can never execute (spawns exhausted)
@@ -256,18 +311,30 @@ class MeasurePool:
                     outcomes[idx] = TaskOutcome(
                         "crash", error="no pool worker could be started")
                 break
-            watch = {self._pool[slot].conn: ("task", slot)
-                     for slot in active}
-            watch.update({self._pool[slot].conn: ("boot", slot)
-                          for slot in booting})
+            watch: dict = {}
+            for slot in active:
+                w = self._pool[slot]
+                if w is not None:
+                    watch[w.conn] = ("task", slot, w)
+            for slot in booting:
+                w = self._pool[slot]
+                if w is not None:
+                    watch[w.conn] = ("boot", slot, w)
             deadlines = ([dl for _, dl, _ in active.values()]
                          + list(booting.values()))
             wait_s = max(0.0, min(deadlines) - time.monotonic()) \
                 if deadlines else None
-            for conn in mp.connection.wait(list(watch), timeout=wait_s):
-                kind, slot = watch[conn]
+            if watch:
+                try:
+                    ready = mp.connection.wait(list(watch), timeout=wait_s)
+                except OSError:  # a pipe closed mid-wait (concurrent close)
+                    ready = []
+            else:  # every watched slot was retired under us; pace the loop
+                time.sleep(min(0.05, wait_s if wait_s is not None else 0.05))
+                ready = []
+            for conn in ready:
+                kind, slot, w = watch[conn]
                 if kind == "boot":
-                    w = self._pool[slot]
                     if w.wait_ready(0):
                         booting.pop(slot)
                         spawn_fails[slot] = 0

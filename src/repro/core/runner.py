@@ -15,7 +15,10 @@ this CPU-only container the corresponding pair is:
 A third runner, :class:`~repro.core.measure_pool.SubprocessRunner`, wraps
 the interpret path in a persistent worker-process pool with a true
 per-candidate timeout kill — the isolation a wedged (not merely crashing)
-build needs; see ``measure_pool.py``.
+build needs; see ``measure_pool.py``. A fourth,
+:class:`~repro.core.board_farm.BoardFarm`, shards each batch across
+several measurement boards (the paper's RPC board farm) with fault-tolerant
+work-stealing dispatch; see ``board_farm.py``.
 
 All satisfy the same ``Runner`` protocol; ``tuner.tune`` is agnostic. The
 ``overlap_capable`` class attribute tells the tuner whether measurement on

@@ -85,6 +85,9 @@ class SessionResult:
     measure_time_s: float = 0.0  # total runner measurement time
     overlap_s: float = 0.0  # measurement time hidden behind search
     model: str = ""  # model/config name, for cross-session trend reports
+    # per-board utilization / requeue counters when the runner is a board
+    # farm (board_farm.BoardFarm.farm_summary); None otherwise
+    board_stats: dict | None = None
 
     @property
     def overlap_fraction(self) -> float:
@@ -123,6 +126,7 @@ class SessionResult:
             "measure_time_s": self.measure_time_s,
             "overlap_s": self.overlap_s,
             "overlap_fraction": self.overlap_fraction,
+            "board_stats": self.board_stats,
             "workloads": [{
                 "key": r.workload.key(),
                 "count": r.count,
@@ -291,12 +295,14 @@ class TuningSession:
                                                               results))]
 
         measure_s = sum(r.measure_time_s for r in results)
+        summary_fn = getattr(self.runner, "farm_summary", None)
         result = SessionResult(
             hw=self.hw, runner_name=self.runner.name, reports=reports,
             total_trials=sum(r.trials for r in reports),
             wall_time_s=time.perf_counter() - t_start,
             interleaved=interleave, pipeline_depth=depth,
-            measure_time_s=measure_s, overlap_s=overlap_s, model=model)
+            measure_time_s=measure_s, overlap_s=overlap_s, model=model,
+            board_stats=summary_fn() if callable(summary_fn) else None)
         if self.database is not None:
             self.database.add_session(result.summary())
             if self.database.path:

@@ -70,6 +70,10 @@ class TuneResult:
     pipeline_depth: int = 1  # effective depth the search ran at
     measure_time_s: float = 0.0  # total time the runner spent measuring
     overlap_s: float = 0.0  # measurement time hidden behind search work
+    # per-board utilization / requeue counters when the runner is a board
+    # farm (see board_farm.BoardFarm.farm_summary); None for single-target
+    # runners
+    board_stats: dict | None = None
 
     @property
     def overlap_fraction(self) -> float:
@@ -277,13 +281,15 @@ class TuneDriver:
     def finish(self, pipeline_depth: int = 1) -> TuneResult:
         if self._in_flight:
             raise RuntimeError("finish() with batches still in flight")
+        summary = getattr(self.runner, "farm_summary", None)
         return TuneResult(
             self.workload, self.hw, self.best_schedule, self.best_latency,
             self.history, len(self.history),
             (self._t_last or time.perf_counter()) - self.t_start,
             warm_started=self.warm_started, pipeline_depth=pipeline_depth,
             measure_time_s=self.measure_time_s,
-            overlap_s=max(0.0, self.measure_time_s - self.wait_time_s))
+            overlap_s=max(0.0, self.measure_time_s - self.wait_time_s),
+            board_stats=summary() if callable(summary) else None)
 
 
 def timed_run_batch(runner: Runner, driver: TuneDriver,

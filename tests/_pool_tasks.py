@@ -46,6 +46,12 @@ def slow_init():
     time.sleep(2.0)
 
 
+def fixed_latency(payload):
+    """LocalBoard task stand-in: constant latency for any candidate."""
+    del payload
+    return 1.5e-3
+
+
 def hang_measure(payload):
     """SubprocessRunner task seam: every 'candidate' wedges forever."""
     del payload

@@ -4,6 +4,7 @@ kill. The fast cases use lightweight tasks from ``tests/_pool_tasks.py``
 case is ``--runslow``."""
 
 import math
+import threading
 import time
 
 import pytest
@@ -76,6 +77,38 @@ def test_pool_distributes_across_worker_processes():
         out = pool.run_many([0.8] * 4)
     pids = {o.value for o in out if o.ok}
     assert len(pids) == 2  # both slots actually ran tasks
+
+
+def test_pool_close_idempotent_while_worker_respawns():
+    """Regression: close()/__del__ used to race a mid-respawn slot — the
+    timeout kill retires a worker and launch() replaces it while another
+    thread tears the pool down, leaking the fresh worker. close() must be
+    idempotent under that race, leave no live slot behind, and let the
+    racing run_many drain instead of crashing."""
+    pool = MeasurePool(_pool_tasks.sleepy, workers=1, timeout_s=0.3)
+    errors = []
+
+    def drive():
+        try:
+            # every task hangs: each one costs a timeout kill + respawn, so
+            # the closing thread below lands mid-respawn with certainty
+            pool.run_many([30.0] * 6)
+        except Exception as e:  # pragma: no cover - the regression itself
+            errors.append(e)
+
+    t = threading.Thread(target=drive, daemon=True)
+    t.start()
+    time.sleep(0.45)  # inside the first kill/respawn churn
+    pool.close()
+    pool.close()  # idempotent
+    t.join(timeout=20.0)
+    assert not t.is_alive()  # run_many drained, didn't wedge
+    assert errors == []  # and didn't crash on the retired slots
+    assert all(w is None for w in pool._pool)  # nothing leaked the teardown
+    assert pool.closed
+    # a closed pool refuses new work uniformly instead of respawning
+    out = pool.run_many([0.01])
+    assert [o.status for o in out] == ["crash"]
 
 
 def test_subprocess_runner_timeout_yields_invalid_and_slot_survives():
