@@ -232,6 +232,19 @@ def space_cardinality() -> None:
             assert v2 > v1, (
                 f"{name}: program space ({v2}) must be strictly larger "
                 f"than the v1 flat space ({v1})")
+        if name == "gemv":
+            # the bn (output-row / J) axis is a real split now, not a
+            # variant-derived constant: several kernel-lowerable candidates
+            # must exist for a wide-n workload (gated by the kernel's
+            # supports_block_shape check)
+            ctx = {"variant": prog["variant"][0]}
+            ctx["bk"] = prog.candidates("bk", ctx)[0]
+            bn_cands = prog.candidates("bn", ctx)
+            emit("space/gemv/bn_axis", float(len(bn_cands)),
+                 f"candidates={list(bn_cands)}")
+            assert len(bn_cands) >= 2, (
+                f"gemv bn axis collapsed to {bn_cands}: the output-row "
+                f"split should offer multiple kernel-supported tiles")
 
 
 # ------------------------------------------------------------- board farm ----
@@ -265,7 +278,12 @@ def farm_suite(trials: int = 4) -> None:
     population — the farm's core operation; wall-time must fall >= 1.5x
     at 4 boards vs 1 (the CI farm smoke asserts it); (2) the full
     TuningSession through the farm (wall / utilization / requeues /
-    overlap); (3) the same session with one board dying mid-run."""
+    overlap); (2b) the same heterogeneous-speed 4-board session driven
+    multi-queue (every driver's batches in flight across the farm at once)
+    vs single-FIFO (one measurement thread, the pre-scheduler path) — the
+    session must run >= 1.3x faster multi-queue with bit-identical
+    per-workload results (the CI farm smoke asserts both); (3) the same
+    session with one board dying mid-run."""
     from repro.core import dedup_workloads
 
     ops = (list(nets.NETWORKS["bert-tiny"]())
@@ -306,6 +324,41 @@ def farm_suite(trials: int = 4) -> None:
              f"trials={res.total_trials} mean_util={np.mean(utils):.2f} "
              f"overlap={res.overlap_fraction:.2f} "
              f"requeues={summary['requeues']}")
+    # (2b) multi-queue vs single-FIFO sessions on a heterogeneous farm:
+    # board speeds vary 4x (the real-RVV-silicon situation), so the
+    # single-FIFO path pays a barrier at every batch boundary while the
+    # multi-queue scheduler keeps every board pulling shards from any
+    # in-flight batch. Same seed, same candidates — the wall delta is
+    # pure scheduling, and the per-workload results must agree exactly.
+    # Delays are scaled up vs (1)/(2) so measurement dominates host-side
+    # search, the paper's FPGA regime (9-12 s per candidate there).
+    hetero = [0.08, 0.16, 0.24, 0.32]
+    sessions = {}
+    for mode, multi_queue in (("single_fifo", False), ("multi_queue", True)):
+        farm = simulated_farm(4, V5E, delay_s=hetero,
+                              straggler_timeout_s=30.0)
+        res = TuningSession(V5E, farm, database=TuningDatabase(), batch=4,
+                            multi_queue=multi_queue).tune_model(
+            ops, total_trials=budget, seed=0, model=f"farm-{mode}")
+        sessions[mode] = res
+        utils = [b["utilization"]
+                 for b in res.board_stats["boards"].values()]
+        emit(f"farm/session4_hetero_{mode}/tune_wall", res.wall_time_s * 1e6,
+             f"trials={res.total_trials} mean_util={np.mean(utils):.2f} "
+             f"overlap={res.overlap_fraction:.2f}")
+    for a, b in zip(sessions["single_fifo"].reports,
+                    sessions["multi_queue"].reports):
+        assert (a.best_schedule == b.best_schedule
+                and a.best_latency == b.best_latency
+                and a.trials == b.trials), (
+            f"multi-queue session diverged from single-FIFO on "
+            f"{a.workload.key()}")
+    gain = (sessions["single_fifo"].wall_time_s
+            / sessions["multi_queue"].wall_time_s)
+    emit("farm/session4_hetero/multi_queue_speedup", gain, f"{gain:.2f}x")
+    assert gain >= 1.3, (
+        f"multi-queue session only {gain:.2f}x faster than single-FIFO "
+        f"at 4 heterogeneous boards (>= 1.3x required)")
     # (3) fault tolerance at benchmark scale: one of four boards dies
     # mid-run, the survivors absorb its candidates, results stay complete
     farm = simulated_farm(4, V5E, delay_s=delay_s,
@@ -464,6 +517,26 @@ def tuning_cost() -> None:
          f"overlap={inter.overlap_fraction:.4f} "
          f"wall_vs_serial={serial.wall_time_s / inter.wall_time_s:.2f}x "
          f"(same candidates)")
+    # multi-queue scheduler smoke (default suite): the same interleaved
+    # session through a simulated board farm, single-FIFO vs multi-queue —
+    # per-workload results must be bit-identical (the determinism contract
+    # of the MeasureScheduler; the farm suite asserts the wall-time win).
+    farm_ops = [(1, W.matmul(128, 128, 128, "bfloat16")), (2, W.vmacc(64, 256))]
+    smoke = {}
+    for mode, mq in (("single_fifo", False), ("multi_queue", True)):
+        farm = simulated_farm(3, V5E, delay_s=[0.002, 0.004, 0.006],
+                              straggler_timeout_s=30.0)
+        smoke[mode] = TuningSession(
+            V5E, farm, database=TuningDatabase(),
+            multi_queue=mq).tune_model(farm_ops, total_trials=16, seed=0)
+        emit(f"tuning_cost/scheduler_smoke/{mode}_wall",
+             smoke[mode].wall_time_s * 1e6,
+             f"overlap={smoke[mode].overlap_fraction:.2f}")
+    for a, b in zip(smoke["single_fifo"].reports,
+                    smoke["multi_queue"].reports):
+        assert (a.best_schedule == b.best_schedule
+                and a.best_latency == b.best_latency), (
+            f"scheduler smoke: multi-queue diverged on {a.workload.key()}")
 
 
 SUITES = {

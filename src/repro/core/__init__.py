@@ -18,6 +18,8 @@ from repro.core.cost_model import RidgeCostModel, features
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
                                xla_latency)
 from repro.core.measure_pool import MeasurePool, SubprocessRunner
+from repro.core.measure_scheduler import (MeasureScheduler, MeasureTicket,
+                                          SerialMeasureQueue)
 from repro.core.board_farm import (Board, BoardDied, BoardFarm, BoardStats,
                                    Fault, FarmDead, LocalBoard,
                                    SimulatedBoard, simulated_farm)
@@ -36,6 +38,7 @@ __all__ = [
     "KernelParams", "SpaceProgram", "flat_space_v1", "tile_candidates",
     "v1_distinct_configs", "TraceSampler", "RidgeCostModel", "features",
     "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
+    "MeasureScheduler", "MeasureTicket", "SerialMeasureQueue",
     "Board", "BoardDied", "BoardFarm", "BoardStats", "Fault", "FarmDead",
     "LocalBoard", "SimulatedBoard", "simulated_farm",
     "run_batch", "xla_latency",

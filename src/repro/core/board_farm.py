@@ -16,23 +16,35 @@ warning. The mapping here:
   and failure behaviour (die mid-batch, hang past the deadline, return
   garbage, come back after a respawn) — the harness the fault-injection and
   determinism tests drive without hardware.
-- :class:`BoardFarm`      ~ the tracker: shards a candidate batch across the
-  boards with work-stealing dispatch (an idle board pulls the next shard
-  from one shared queue, so fast boards naturally absorb more work),
-  enforces a per-board straggler deadline, requeues the candidates of a
-  dead or abandoned board onto the survivors (bounded retries, then
-  ``INVALID``), and reconciles results in **submission order**.
+- :class:`BoardFarm`      ~ the tracker: a **persistent dispatcher** thread
+  owns one shared work-stealing queue that spans batch boundaries. Batches
+  enter through the async submission protocol
+  (:meth:`BoardFarm.submit_batch` returns a
+  :class:`~repro.core.measure_scheduler.MeasureTicket`); an idle board
+  pulls the next shard from the queue regardless of which in-flight batch
+  — or which driver — the candidates came from, so boards never idle at a
+  batch boundary while another batch has work queued. The farm enforces a
+  per-board straggler deadline, requeues the candidates of a dead or
+  abandoned board onto the survivors (bounded retries, then ``INVALID``)
+  even when the dead board's shard mixed candidates from several batches,
+  and fulfils every ticket with latencies aligned to its own submission
+  order.
 
-Determinism: ``run_batch`` returns latencies aligned with the submitted
+Determinism: each ticket's latencies are aligned with its submitted
 schedules, and each candidate's latency is a function of the candidate
 alone (every board measures against the same farm hardware config), so a
 fixed tuner seed replays bit-identically regardless of which board finished
-first, how the shards were stolen, or how often a flaky board died.
-``BoardFarm`` declares ``overlap_capable = True`` and satisfies the
-``Runner`` protocol, so it drops into :func:`~repro.core.tuner.tune` and
-:class:`~repro.core.session.TuningSession` unchanged; per-board utilization
-and requeue counts surface through :meth:`BoardFarm.farm_summary` into
-``TuneResult.board_stats`` and session summaries.
+first, how shards were stolen across batches, or how often a flaky board
+died. ``BoardFarm`` declares ``overlap_capable = True`` and satisfies both
+the synchronous ``Runner`` protocol (``run_batch`` = submit + wait) and the
+async submission protocol (``submit_batch`` + a ``max_inflight`` hint =
+board count), so it drops into :func:`~repro.core.tuner.tune` and
+:class:`~repro.core.session.TuningSession` unchanged — and lets the
+:class:`~repro.core.measure_scheduler.MeasureScheduler` keep every board
+busy across workloads. Per-board utilization and requeue counts surface
+through :meth:`BoardFarm.farm_summary` into ``TuneResult.board_stats`` and
+session summaries; utilization is span-accurate (busy seconds over the
+farm's *active* span, the union of periods with work in the system).
 """
 
 from __future__ import annotations
@@ -47,6 +59,7 @@ from collections import deque
 from typing import Any, Callable, Sequence
 
 from repro.core.hardware import HardwareConfig
+from repro.core.measure_scheduler import MeasureTicket
 from repro.core.runner import INVALID
 from repro.core.schedule import Schedule
 from repro.core.workload import Workload
@@ -97,6 +110,24 @@ class Board:
         """Latencies aligned with ``schedules``; raise :class:`BoardDied`
         when the board itself (not a candidate) fails."""
         raise NotImplementedError
+
+    def measure_many(self, items: Sequence[tuple[Workload, Schedule]]
+                     ) -> list[float]:
+        """Measure a shard whose candidates may span *batches* — and
+        therefore workloads (different drivers tune different workloads).
+        The default groups consecutive same-workload runs into
+        :meth:`measure` calls, preserving order; boards whose measurement
+        host is per-candidate anyway (:class:`LocalBoard`) override it."""
+        out: list[float] = []
+        i = 0
+        while i < len(items):
+            wl = items[i][0]
+            j = i
+            while j < len(items) and items[j][0].key() == wl.key():
+                j += 1
+            out.extend(self.measure(wl, [s for _, s in items[i:j]]))
+            i = j
+        return out
 
     def abandon(self) -> None:
         """Farm gave up on the in-flight shard: wake/unblock a hung measure
@@ -246,9 +277,16 @@ class LocalBoard(Board):
 
     def measure(self, workload: Workload,
                 schedules: Sequence[Schedule]) -> list[float]:
+        return self.measure_many([(workload, s) for s in schedules])
+
+    def measure_many(self, items: Sequence[tuple[Workload, Schedule]]
+                     ) -> list[float]:
+        """Native cross-batch shard support: the pool's payloads are
+        per-candidate anyway, so a shard mixing workloads from different
+        in-flight batches is one ``run_many`` call, no grouping."""
         pool = self._ensure_pool()
-        payloads = [(self.hw, workload, s, self.repeats, self.warmup)
-                    for s in schedules]
+        payloads = [(self.hw, wl, s, self.repeats, self.warmup)
+                    for wl, s in items]
         outcomes = pool.run_many(payloads)
         if outcomes and all(o.status == "crash" and not o.elapsed_s
                             for o in outcomes):
@@ -267,36 +305,85 @@ class LocalBoard(Board):
             self._pool = None
 
 
+class _FarmTicket(MeasureTicket):
+    """One submitted batch: per-candidate results filled in as the farm's
+    dispatcher completes (or gives up on) each candidate, fulfilled when
+    the last one lands."""
+
+    def __init__(self, workload: Workload, schedules: Sequence[Schedule]):
+        super().__init__(workload, schedules)
+        self.results: list[float | None] = [None] * len(self.schedules)
+        self.remaining = len(self.schedules)
+
+    def _settle(self, idx: int, latency: float) -> bool:
+        """Record one candidate's latency; True when the batch completed."""
+        if self.results[idx] is None:
+            self.results[idx] = latency
+            self.remaining -= 1
+        if self.remaining == 0 and not self.done():
+            self._complete([lat if lat is not None else INVALID
+                            for lat in self.results])
+            return True
+        return False
+
+
+@dataclasses.dataclass
+class _WorkItem:
+    """One candidate on the farm's shared cross-batch work queue."""
+
+    ticket: _FarmTicket
+    idx: int  # position within the ticket's batch
+    workload: Workload
+    schedule: Schedule
+    attempts: int = 0
+
+
+_WAKE = (None, "wake", None)  # queue sentinel: new work arrived
+_STOP = (None, "stop", None)  # queue sentinel: farm closed
+
+
 class BoardFarm:
     """Shard candidate batches across a pool of boards (the paper's tracker).
 
-    Satisfies the ``Runner`` protocol (``run``/``run_batch``/``name``/
-    ``hw``) and declares ``overlap_capable``, so the tuner pipeline and
-    interleaved sessions treat the farm exactly like a single slow board —
-    the fan-out is entirely inside ``run_batch``:
+    Satisfies the synchronous ``Runner`` protocol (``run``/``run_batch``/
+    ``name``/``hw``, with ``run_batch`` = submit + wait) *and* the async
+    submission protocol (:meth:`submit_batch` returning a ticket,
+    ``max_inflight`` = board count), and declares ``overlap_capable`` — so
+    the tuner pipeline and interleaved sessions treat the farm like a
+    single slow board, while the
+    :class:`~repro.core.measure_scheduler.MeasureScheduler` can hold many
+    batches from many drivers in flight on it at once. The fan-out lives in
+    a **persistent dispatcher** thread:
 
-    - **work stealing** — one shared queue; every idle healthy board is
-      handed the next ``capacity`` candidates, so a fast board that
-      finishes early simply pulls again while a slow one still holds its
-      first shard;
+    - **cross-batch work stealing** — one shared queue spanning batch
+      boundaries; every idle healthy board is handed the next ``capacity``
+      candidates *from any in-flight batch*, so a fast board that drains
+      one batch immediately pulls from the next instead of idling at the
+      barrier (a shard may even mix candidates of different batches — and
+      different workloads);
     - **stragglers** — a board that holds a shard past its deadline
       (``straggler_timeout_s`` or the board's own ``timeout_s``) is
       abandoned and declared dead; its dispatch thread is daemonized and
       its late result, should it ever arrive, is dropped by token;
     - **requeue** — candidates of a dead/abandoned board go back on the
-      queue for the survivors, at most ``max_retries`` times each, then
+      queue for the survivors — including candidates the board held for
+      several different batches — at most ``max_retries`` times each, then
       ``INVALID`` (a candidate that kills every board it touches must not
       circle forever);
     - **respawn** — a dead board gets up to ``max_respawns`` revival
       attempts (``Board.respawn``); until one succeeds it takes no work;
-    - **reconciliation** — results land in submission order (aligned with
-      the input), so the search trajectory is independent of completion
-      order;
+    - **reconciliation** — every ticket's latencies align with its own
+      submitted order, so each driver reconciles per-driver FIFO and the
+      search trajectory is independent of completion order;
     - **clean failure** — if every board is dead and candidates remain,
-      :class:`FarmDead` is raised instead of blocking the FIFO queue.
+      every pending ticket fails with :class:`FarmDead` (``result()`` and
+      ``run_batch`` raise it) instead of blocking the measurement queue.
     """
 
     overlap_capable = True
+    # idle dispatcher threads exit after this grace (a fresh submit
+    # respawns one), so an unclosed farm never parks a thread forever
+    _IDLE_EXIT_S = 0.5
 
     def __init__(self, boards: Sequence[Board], hw: HardwareConfig | None = None,
                  name: str = "farm", max_retries: int = 2,
@@ -314,13 +401,30 @@ class BoardFarm:
         self.straggler_timeout_s = straggler_timeout_s
         self._respawns_left = {b.name: max(0, int(max_respawns))
                                for b in boards}
-        # farm-level counters, cumulative across run_batch calls
+        # farm-level counters, cumulative across batches
         self.requeues = 0  # candidate requeue events
         self.retry_exhausted = 0  # candidates INVALID after max_retries
         self.garbage_sanitized = 0  # non-physical latencies mapped to INVALID
-        self._wall_s = 0.0  # time spent inside run_batch
+        self._wall_s = 0.0  # accumulated active span (work in the system)
+        self._span_t0: float | None = None  # start of the current active span
         self._tokens = itertools.count()
         self._done: queue.Queue = queue.Queue()  # (token, status, payload)
+        # dispatcher state: the shared cross-batch queue + in-flight shards
+        self._mu = threading.Lock()
+        self._work: deque[_WorkItem] = deque()
+        # token -> (board, shard, t0, deadline); shard = [_WorkItem]
+        self._inflight: dict[int, tuple[Board, list[_WorkItem], float,
+                                        float]] = {}
+        self._busy: set[str] = set()
+        self._dispatcher: threading.Thread | None = None
+        self._closed = False
+
+    # ---- capacity hint ---------------------------------------------------------
+    @property
+    def max_inflight(self) -> int:
+        """Submission-protocol hint: batches that make physical progress
+        concurrently — one per board (each board holds one shard)."""
+        return len(self.boards)
 
     # ---- runner protocol -------------------------------------------------------
     def run(self, workload: Workload, schedule: Schedule) -> float:
@@ -328,17 +432,41 @@ class BoardFarm:
 
     def run_batch(self, workload: Workload,
                   schedules: Sequence[Schedule]) -> list[float]:
-        t0 = time.monotonic()
-        try:
-            return self._run(workload, list(schedules))
-        finally:
-            self._wall_s += time.monotonic() - t0
+        return self.submit_batch(workload, schedules).result()
+
+    # ---- async submission protocol ---------------------------------------------
+    def submit_batch(self, workload: Workload,
+                     schedules: Sequence[Schedule]) -> _FarmTicket:
+        ticket = _FarmTicket(workload, schedules)
+        if not ticket.schedules:
+            ticket._complete([])
+            return ticket
+        with self._mu:
+            if self._closed:
+                ticket._fail(RuntimeError(f"farm {self.name} is closed"))
+                return ticket
+            if self._span_t0 is None and not self._inflight \
+                    and not self._work:
+                self._span_t0 = time.monotonic()
+            self._work.extend(
+                _WorkItem(ticket, i, workload, s)
+                for i, s in enumerate(ticket.schedules))
+            self._ensure_dispatcher()
+        self._done.put(_WAKE)
+        return ticket
+
+    def _ensure_dispatcher(self) -> None:
+        if self._dispatcher is None or not self._dispatcher.is_alive():
+            self._dispatcher = threading.Thread(
+                target=self._dispatch_loop, daemon=True,
+                name=f"farm-{self.name}-dispatch")
+            self._dispatcher.start()
 
     # ---- dispatch machinery ----------------------------------------------------
-    def _board_thread(self, token: int, board: Board, workload: Workload,
-                      schedules: list[Schedule]) -> None:
+    def _board_thread(self, token: int, board: Board,
+                      items: list[tuple[Workload, Schedule]]) -> None:
         try:
-            lats = board.measure(workload, schedules)
+            lats = board.measure_many(items)
         except BoardDied as e:
             self._done.put((token, "died", str(e)))
         except Exception as e:  # any other escape is a board bug, not fatal
@@ -361,103 +489,163 @@ class BoardFarm:
             return INVALID
         return lat
 
-    def _run(self, workload: Workload,
-             schedules: list[Schedule]) -> list[float]:
-        n = len(schedules)
-        if n == 0:
-            return []
-        results: list[float | None] = [None] * n
-        todo: deque[tuple[int, int]] = deque((i, 0) for i in range(n))
-        # token -> (board, shard, t0, deadline); shard = [(idx, attempts)]
-        inflight: dict[int, tuple[Board, list[tuple[int, int]], float,
-                                  float]] = {}
-        busy: set[str] = set()
-
-        def dispatch() -> None:
-            for board in self.boards:
-                if not todo:
-                    return
-                if not board.healthy or board.name in busy:
-                    continue
-                shard = [todo.popleft()
-                         for _ in range(min(board.capacity, len(todo)))]
-                token = next(self._tokens)
-                board.stats.dispatched += len(shard)
-                busy.add(board.name)
-                now = time.monotonic()
-                deadline = now + (board.timeout_s
-                                  if board.timeout_s is not None
-                                  else self.straggler_timeout_s)
-                inflight[token] = (board, shard, now, deadline)
-                threading.Thread(
-                    target=self._board_thread, daemon=True,
-                    name=f"board-{board.name}",
-                    args=(token, board, workload,
-                          [schedules[i] for i, _ in shard])).start()
-
-        def requeue(board: Board, shard: list[tuple[int, int]]) -> None:
-            for idx, attempts in shard:
-                board.stats.requeued += 1
-                if attempts + 1 > self.max_retries:
-                    results[idx] = INVALID
-                    self.retry_exhausted += 1
-                else:
-                    self.requeues += 1
-                    todo.append((idx, attempts + 1))
-
-        def board_down(board: Board) -> None:
-            board.healthy = False
-            board.stats.deaths += 1
-            board.abandon()
-            if self._respawns_left.get(board.name, 0) > 0:
-                self._respawns_left[board.name] -= 1
-                if board.respawn():
-                    board.stats.respawns += 1
-                    board.healthy = True
-
-        dispatch()
-        while todo or inflight:
-            if not inflight:
-                if not any(b.healthy for b in self.boards):
-                    raise FarmDead(
-                        f"all {len(self.boards)} boards dead with "
-                        f"{len(todo)} candidates unmeasured")
-                dispatch()
+    def _dispatch_locked(self) -> None:
+        """Hand shards to idle healthy boards from the shared queue; a
+        shard may span batch (ticket) boundaries."""
+        for board in self.boards:
+            if not self._work:
+                return
+            if not board.healthy or board.name in self._busy:
                 continue
-            timeout = max(0.0, min(dl for _, _, _, dl in inflight.values())
-                          - time.monotonic())
-            try:
-                token, status, payload = self._done.get(timeout=timeout)
-            except queue.Empty:
-                token = None
-            if token is not None and token in inflight:
-                board, shard, t_disp, _ = inflight.pop(token)
-                busy.discard(board.name)
-                board.stats.busy_s += time.monotonic() - t_disp
-                if status == "ok" and len(payload) == len(shard):
-                    for (idx, _), lat in zip(shard, payload):
-                        results[idx] = self._sanitize(lat)
-                        board.stats.completed += 1
-                else:  # board died, errored, or violated the protocol
-                    requeue(board, shard)
-                    board_down(board)
-            # late messages for abandoned tokens fall through and are dropped
+            shard = [self._work.popleft()
+                     for _ in range(min(board.capacity, len(self._work)))]
+            token = next(self._tokens)
+            board.stats.dispatched += len(shard)
+            self._busy.add(board.name)
             now = time.monotonic()
-            for token in [t for t, (_, _, _, dl) in inflight.items()
-                          if dl <= now]:
-                board, shard, t_disp, _ = inflight.pop(token)
-                busy.discard(board.name)
-                board.stats.busy_s += now - t_disp
-                requeue(board, shard)
-                board_down(board)
-            dispatch()
-        return [lat if lat is not None else INVALID for lat in results]
+            for item in shard:
+                item.ticket._mark_started()
+            deadline = now + (board.timeout_s
+                              if board.timeout_s is not None
+                              else self.straggler_timeout_s)
+            self._inflight[token] = (board, shard, now, deadline)
+            threading.Thread(
+                target=self._board_thread, daemon=True,
+                name=f"board-{board.name}",
+                args=(token, board,
+                      [(item.workload, item.schedule) for item in shard])
+            ).start()
+
+    def _requeue_locked(self, board: Board,
+                        shard: list[_WorkItem]) -> None:
+        for item in shard:
+            board.stats.requeued += 1
+            if item.attempts + 1 > self.max_retries:
+                self.retry_exhausted += 1
+                item.ticket._settle(item.idx, INVALID)
+            else:
+                self.requeues += 1
+                item.attempts += 1
+                self._work.append(item)
+
+    def _board_down_locked(self, board: Board) -> None:
+        board.healthy = False
+        board.stats.deaths += 1
+        board.abandon()
+        if self._respawns_left.get(board.name, 0) > 0:
+            self._respawns_left[board.name] -= 1
+            if board.respawn():
+                board.stats.respawns += 1
+                board.healthy = True
+
+    def _fail_pending_locked(self, error: Exception) -> None:
+        """Fail every ticket that still has unmeasured candidates (farm
+        dead / closed): the measurement queue must fail fast, never block."""
+        pending = {item.ticket for item in self._work}
+        for _, shard, _, _ in self._inflight.values():
+            pending.update(item.ticket for item in shard)
+        self._work.clear()
+        for ticket in pending:
+            if not ticket.done():
+                ticket._fail(error)
+
+    def _close_span_locked(self) -> None:
+        if self._span_t0 is not None and not self._work \
+                and not self._inflight:
+            self._wall_s += time.monotonic() - self._span_t0
+            self._span_t0 = None
+
+    def _dispatch_loop(self) -> None:
+        """Persistent dispatcher: pull completions/deaths off the done
+        queue, sweep straggler deadlines, requeue and respawn, keep idle
+        boards fed from the shared cross-batch queue."""
+        try:
+            while True:
+                with self._mu:
+                    if self._closed:
+                        self._fail_pending_locked(
+                            RuntimeError(f"farm {self.name} is closed"))
+                        return
+                    self._dispatch_locked()
+                    deadlines = [dl for _, _, _, dl
+                                 in self._inflight.values()]
+                    idle = not self._work and not self._inflight
+                    if idle:
+                        self._close_span_locked()
+                timeout = None
+                if deadlines:
+                    timeout = max(0.0, min(deadlines) - time.monotonic())
+                elif idle:
+                    timeout = self._IDLE_EXIT_S
+                try:
+                    token, status, payload = self._done.get(timeout=timeout)
+                except queue.Empty:
+                    token, status, payload = None, None, None
+                    if idle:
+                        with self._mu:
+                            # still nothing to do after the grace: retire
+                            # this thread (submit_batch respawns one; a
+                            # submit racing us either sees the live thread
+                            # and enqueues before we re-check, or sees
+                            # None and spawns fresh — never both)
+                            if not self._work and not self._inflight \
+                                    and not self._closed:
+                                if self._dispatcher is \
+                                        threading.current_thread():
+                                    self._dispatcher = None
+                                return
+                with self._mu:
+                    if status == "stop" or self._closed:
+                        self._fail_pending_locked(
+                            RuntimeError(f"farm {self.name} is closed"))
+                        return
+                    if token is not None and token in self._inflight:
+                        board, shard, t_disp, _ = self._inflight.pop(token)
+                        self._busy.discard(board.name)
+                        board.stats.busy_s += time.monotonic() - t_disp
+                        if status == "ok" and len(payload) == len(shard):
+                            for item, lat in zip(shard, payload):
+                                board.stats.completed += 1
+                                item.ticket._settle(item.idx,
+                                                    self._sanitize(lat))
+                        else:  # board died, errored, or broke the protocol
+                            self._requeue_locked(board, shard)
+                            self._board_down_locked(board)
+                    # late messages for abandoned tokens fall through and
+                    # are dropped; _WAKE pokes just re-run dispatch
+                    now = time.monotonic()
+                    for tok in [t for t, (_, _, _, dl)
+                                in self._inflight.items() if dl <= now]:
+                        board, shard, t_disp, _ = self._inflight.pop(tok)
+                        self._busy.discard(board.name)
+                        board.stats.busy_s += now - t_disp
+                        self._requeue_locked(board, shard)
+                        self._board_down_locked(board)
+                    self._dispatch_locked()
+                    if self._work and not self._inflight \
+                            and not any(b.healthy for b in self.boards):
+                        self._fail_pending_locked(FarmDead(
+                            f"all {len(self.boards)} boards dead with "
+                            f"{len(self._work)} candidates unmeasured"))
+                    self._close_span_locked()
+        except BaseException as e:  # dispatcher bug: never strand waiters
+            with self._mu:
+                self._fail_pending_locked(
+                    e if isinstance(e, Exception)
+                    else RuntimeError(f"farm dispatcher died: {e!r}"))
+            raise
 
     # ---- reporting / lifecycle -------------------------------------------------
     def farm_summary(self) -> dict:
         """Per-board utilization and requeue counters (cumulative), the
-        payload ``TuneResult.board_stats`` and session summaries carry."""
-        wall = self._wall_s
+        payload ``TuneResult.board_stats`` and session summaries carry.
+        Utilization is span-accurate: busy seconds over the farm's *active*
+        span (the union of periods with work in the system), so concurrent
+        batches are not double-counted in the denominator."""
+        with self._mu:
+            wall = self._wall_s
+            if self._span_t0 is not None:
+                wall += time.monotonic() - self._span_t0
         return {
             "boards": {b.name: {
                 "hw": b.hw.name,
@@ -477,6 +665,12 @@ class BoardFarm:
         }
 
     def close(self) -> None:
+        with self._mu:
+            self._closed = True
+            dispatcher = self._dispatcher
+        if dispatcher is not None and dispatcher.is_alive():
+            self._done.put(_STOP)
+            dispatcher.join(timeout=5.0)
         for board in self.boards:
             board.abandon()
             board.close()

@@ -17,6 +17,7 @@ same way MetaSchedule's matcher does: a variant whose block exceeds the
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 from repro.core.hardware import HardwareConfig
@@ -134,14 +135,24 @@ _FAMILY = {
 }
 
 
+@functools.lru_cache(maxsize=None)
+def _all_variants_cached(op: str, hw: HardwareConfig,
+                         dtype: str) -> tuple[IntrinsicVariant, ...]:
+    return tuple(dataclasses.replace(v, op=op) for v in _FAMILY[op](hw, dtype))
+
+
 def all_variants(op: str, hw: HardwareConfig, dtype: str) -> list[IntrinsicVariant]:
-    return [dataclasses.replace(v, op=op) for v in _FAMILY[op](hw, dtype)]
+    # The registry is a pure function of (op, hw, dtype) and both key types
+    # are frozen dataclasses — memoized because the design-space programs'
+    # candidate-set closures hit it on every trace replay (it dominated
+    # sampling cost when recomputed: the ladder + dataclass copies ran
+    # tens of thousands of times per tuning session).
+    return list(_all_variants_cached(op, hw, dtype))
 
 
-def variants_for(workload: Workload, hw: HardwareConfig) -> list[IntrinsicVariant]:
-    """MetaSchedule-style matching: keep variants whose block can tile the
-    (padded) workload. Oversized variants are dropped, exactly as a VL=VLMAX
-    intrinsic cannot match a small operator in the paper."""
+@functools.lru_cache(maxsize=None)
+def _variants_for_cached(workload: Workload,
+                         hw: HardwareConfig) -> tuple[IntrinsicVariant, ...]:
     cands = all_variants(workload.op, hw, workload.dtype)
     dims = workload.dims
     out = []
@@ -168,4 +179,13 @@ def variants_for(workload: Workload, hw: HardwareConfig) -> list[IntrinsicVarian
             out.append(v)
     if not out:  # guarantee at least the minimal variant matches
         out = [cands[-1]]
-    return out
+    return tuple(out)
+
+
+def variants_for(workload: Workload, hw: HardwareConfig) -> list[IntrinsicVariant]:
+    """MetaSchedule-style matching: keep variants whose block can tile the
+    (padded) workload. Oversized variants are dropped, exactly as a VL=VLMAX
+    intrinsic cannot match a small operator in the paper. Memoized per
+    (workload, hardware) — both frozen — for the same reason as
+    :func:`all_variants`: trace replay consults it per candidate set."""
+    return list(_variants_for_cached(workload, hw))

@@ -427,6 +427,11 @@ class SubprocessRunner:
     # See tuner.py: runners with real measurement latency opt into the
     # pipelined (speculative) tuner loop.
     overlap_capable = True
+    # MeasureScheduler capacity hint: run_batch is synchronous over one
+    # pool, so submitted batches progress one at a time (the pool's own
+    # workers parallelize *within* a batch). A farm of LocalBoards — each
+    # wrapping its own MeasurePool — is the multi-inflight configuration.
+    max_inflight = 1
     # test seam: replace the in-worker measurement task (must stay a
     # module-level callable so spawn can import it by reference)
     task: Callable[[Any], Any] = _measure_candidate

@@ -1,0 +1,341 @@
+"""Multi-queue measurement scheduling — batches from many drivers in flight.
+
+On the paper's board farm, measurement wall-time dominates tuning; PR 4's
+:class:`~repro.core.board_farm.BoardFarm` parallelized *within* one candidate
+batch, but the tuner/session loop still drove every driver's batches through
+one FIFO measurement thread — so a farm's boards idled at every batch
+boundary and whenever one workload's queue drained. This module closes that
+gap with three pieces:
+
+- **Async submission protocol** (duck-typed on ``Runner``): a runner may
+  expose ``submit_batch(workload, schedules) -> ticket`` returning a
+  :class:`MeasureTicket` (a future: ``done()``/``result()``) plus a
+  ``max_inflight`` capacity hint — how many submitted batches can make
+  *physical* progress concurrently (1 for a single measurement target; a
+  board farm reports its board count).
+- :class:`SerialMeasureQueue` — the default adapter wrapping any synchronous
+  ``run_batch`` runner behind one FIFO measurement thread, so
+  ``AnalyticRunner``/``InterpretRunner``/``SubprocessRunner`` need no
+  changes (and it reproduces the old single-queue behaviour exactly, which
+  the multi-queue-vs-single-FIFO benchmarks and determinism tests rely on).
+- :class:`MeasureScheduler` — holds many tickets from many submitters
+  (drivers) in flight at once, hands back completed batches **per-submitter
+  FIFO** (the determinism contract: each driver reconciles its own batches
+  in submission order; *which* driver reconciles next may follow completion,
+  which never leaks into any driver's trajectory), and tracks real
+  busy/wait *intervals* so measurement/search overlap and utilization are
+  span-accurate under concurrency instead of estimated from summed totals.
+
+``tuner.run_scheduled`` (and through it ``tune`` and
+``TuningSession``) is built on this scheduler; ``BoardFarm`` implements the
+protocol natively with a persistent cross-batch work-stealing dispatcher.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Sequence
+
+from repro.core.schedule import Schedule
+from repro.core.workload import Workload
+
+
+class MeasureTicket:
+    """A future for one submitted measurement batch.
+
+    ``t_start``/``t_end`` bracket when the backend *actually* measured the
+    batch (first dispatch to completion), not when it sat queued — the raw
+    material for span-accurate overlap accounting. Backends fulfil a ticket
+    with :meth:`_complete` (latencies aligned with the submitted schedules)
+    or :meth:`_fail` (an exception ``result()`` re-raises, e.g.
+    :class:`~repro.core.board_farm.FarmDead`).
+    """
+
+    def __init__(self, workload: Workload, schedules: Sequence[Schedule]):
+        self.workload = workload
+        self.schedules = list(schedules)
+        self.t_start: float | None = None  # measurement actually began
+        self.t_end: float | None = None
+        self._event = threading.Event()
+        self._listeners: list[threading.Event] = []
+        self._latencies: list[float] | None = None
+        self._error: BaseException | None = None
+
+    # ---- backend side ----------------------------------------------------------
+    def _mark_started(self) -> None:
+        if self.t_start is None:
+            self.t_start = time.monotonic()
+
+    def _notify(self) -> None:
+        self._event.set()
+        for listener in list(self._listeners):
+            listener.set()
+
+    def _complete(self, latencies: Sequence[float]) -> None:
+        self._mark_started()
+        self.t_end = time.monotonic()
+        self._latencies = list(latencies)
+        self._notify()
+
+    def _fail(self, error: BaseException) -> None:
+        self.t_end = time.monotonic()
+        self._error = error
+        self._notify()
+
+    def subscribe(self, event: threading.Event) -> None:
+        """Register a shared wake-up event set on completion (the
+        scheduler's wait-for-any primitive). Consumers must tolerate a
+        spurious or slightly-late wake (they re-scan on wake anyway)."""
+        self._listeners.append(event)
+        if self._event.is_set():
+            event.set()
+
+    # ---- consumer side ---------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> list[float]:
+        if not self._event.wait(timeout):
+            raise TimeoutError("measurement ticket not fulfilled in time")
+        if self._error is not None:
+            raise self._error
+        assert self._latencies is not None
+        return self._latencies
+
+    @property
+    def measure_s(self) -> float:
+        """Wall-clock the backend spent on this batch (0 until fulfilled)."""
+        if self.t_start is None or self.t_end is None:
+            return 0.0
+        return max(0.0, self.t_end - self.t_start)
+
+    def interval(self) -> tuple[float, float] | None:
+        if self.t_start is None or self.t_end is None:
+            return None
+        return (self.t_start, self.t_end)
+
+
+class SerialMeasureQueue:
+    """Default async adapter: one FIFO measurement thread over a synchronous
+    runner — exactly the single-queue pipeline ``run_pipelined`` used to
+    hard-code, packaged behind the submission protocol so runners without a
+    native ``submit_batch`` need no changes. ``max_inflight = 1``: extra
+    submissions queue behind the single measurement thread."""
+
+    max_inflight = 1
+
+    def __init__(self, runner):
+        self.runner = runner
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._thread: threading.Thread | None = None
+        self._closed = False
+
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="measure-serial")
+            self._thread.start()
+
+    def _loop(self) -> None:
+        from repro.core.runner import run_batch as _run_batch
+
+        while True:
+            ticket = self._q.get()
+            if ticket is None:  # close sentinel
+                return
+            ticket._mark_started()
+            try:
+                lats = _run_batch(self.runner, ticket.workload,
+                                  ticket.schedules)
+            except BaseException as e:  # surfaced at ticket.result()
+                ticket._fail(e)
+            else:
+                ticket._complete(lats)
+
+    def submit_batch(self, workload: Workload,
+                     schedules: Sequence[Schedule]) -> MeasureTicket:
+        if self._closed:
+            raise RuntimeError("measurement queue is closed")
+        ticket = MeasureTicket(workload, schedules)
+        self._ensure_thread()
+        self._q.put(ticket)
+        return ticket
+
+    def close(self) -> None:
+        self._closed = True
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+def _union_length(intervals: Sequence[tuple[float, float]]) -> float:
+    """Total length of the union of (start, end) intervals."""
+    total = 0.0
+    end = float("-inf")
+    for a, b in sorted(intervals):
+        if b <= end:
+            continue
+        total += b - max(a, end)
+        end = b
+    return total
+
+
+class _Entry:
+    """One in-flight submission; ordering is the _fifo deque's position."""
+
+    __slots__ = ("key", "batch", "ticket")
+
+    def __init__(self, key, batch, ticket):
+        self.key, self.batch, self.ticket = key, batch, ticket
+
+
+class MeasureScheduler:
+    """Hold measurement batches from several submitters in flight at once.
+
+    ``submit(key, workload, schedules)`` pushes one batch for submitter
+    ``key`` (a driver index, a baseline slot, ...); ``collect_next()``
+    blocks for the next reconcilable batch and returns ``(key, batch,
+    latencies, wait_s, measure_s)``. Two ordering guarantees:
+
+    - **per-key FIFO** — a key's batches always come back in its own
+      submission order (what deterministic trace replay requires);
+    - **completion-aware across keys** — if any in-flight ticket has already
+      completed, the earliest-*submitted* completed one is returned without
+      blocking, so its submitter can be topped up immediately; only when
+      nothing is ready does the call block on the globally oldest ticket.
+      Which key is picked is a wall-clock observation, but it can never
+      change any single key's reconcile order — per-key trajectories stay
+      bit-identical to the single-FIFO schedule.
+
+    ``multi_queue=None`` (auto) uses the runner's native ``submit_batch``
+    when it has one (a :class:`~repro.core.board_farm.BoardFarm`); pass
+    ``False`` to force the single-FIFO :class:`SerialMeasureQueue` even
+    then (the comparison baseline). ``True`` *requests* the native path but
+    degrades to the serial queue when the runner has none — check the
+    resulting ``multi_queue`` attribute for the effective mode.
+
+    The scheduler records every ticket's real measuring interval and every
+    interval the consuming thread spent *blocked* in ``collect_next``;
+    :meth:`overlap_s` is then span-accurate — measurement wall-time during
+    which the consumer was doing something other than waiting — rather than
+    the old ``max(0, Σmeasure − Σwait)`` estimate, which under-/over-counts
+    as soon as batches overlap each other.
+    """
+
+    def __init__(self, runner, multi_queue: bool | None = None):
+        native = callable(getattr(runner, "submit_batch", None))
+        self.multi_queue = native if multi_queue is None \
+            else bool(multi_queue and native)
+        if self.multi_queue:
+            self._backend, self._owns_backend = runner, False
+        else:
+            self._backend, self._owns_backend = SerialMeasureQueue(runner), True
+        self.max_inflight = max(1, int(getattr(self._backend,
+                                               "max_inflight", 1)))
+        self._fifo: deque[_Entry] = deque()  # global submission order
+        self._any_done = threading.Event()  # set whenever any ticket lands
+        self._measure_ivs: dict[Any, list[tuple[float, float]]] = {}
+        self._wait_ivs: list[tuple[float, float]] = []
+
+    # ---- submission ------------------------------------------------------------
+    def submit(self, key: Any, workload: Workload,
+               schedules: Sequence[Schedule]) -> MeasureTicket:
+        ticket = self._backend.submit_batch(workload, list(schedules))
+        ticket.subscribe(self._any_done)
+        self._fifo.append(_Entry(key, list(schedules), ticket))
+        return ticket
+
+    def inflight(self, key: Any = None) -> int:
+        if key is None:
+            return len(self._fifo)
+        return sum(1 for e in self._fifo if e.key == key)
+
+    def _next_ready(self) -> "_Entry | None":
+        """Earliest-submitted completed entry that is also its key's oldest
+        in-flight entry (the per-key FIFO eligibility rule)."""
+        blocked: set = set()
+        for entry in self._fifo:
+            if entry.key in blocked:
+                continue
+            if entry.ticket.done():
+                return entry
+            blocked.add(entry.key)
+        return None
+
+    # ---- collection ------------------------------------------------------------
+    def collect_next(self) -> tuple[Any, list[Schedule], list[float],
+                                    float, float]:
+        """Block for the next reconcilable batch (see class docstring for
+        the ordering contract); raises whatever the backend failed the
+        ticket with (e.g. ``FarmDead``)."""
+        if not self._fifo:
+            raise RuntimeError("collect_next() with nothing in flight")
+        t0 = time.monotonic()
+        # Wait until some key's HEAD ticket completes, then take the
+        # earliest-submitted such entry — never block on the global head
+        # while a later ticket's submitter could be topped up. Only a key's
+        # oldest in-flight entry is eligible (per-key FIFO: a driver whose
+        # second batch finished before its first must wait for the first),
+        # and the clear-then-rescan pattern makes a racing completion at
+        # worst one poll-timeout late.
+        while True:
+            entry = self._next_ready()
+            if entry is not None:
+                break
+            self._any_done.clear()
+            entry = self._next_ready()
+            if entry is not None:
+                break
+            self._any_done.wait(timeout=0.1)
+        self._fifo.remove(entry)
+        try:
+            latencies = entry.ticket.result()
+        finally:
+            t1 = time.monotonic()
+            if t1 > t0:
+                self._wait_ivs.append((t0, t1))
+            iv = entry.ticket.interval()
+            if iv is not None:
+                self._measure_ivs.setdefault(entry.key, []).append(iv)
+        return (entry.key, entry.batch, latencies, t1 - t0,
+                entry.ticket.measure_s)
+
+    # ---- span accounting -------------------------------------------------------
+    def _intervals(self, key: Any = None) -> list[tuple[float, float]]:
+        if key is None:
+            return [iv for ivs in self._measure_ivs.values() for iv in ivs]
+        return list(self._measure_ivs.get(key, ()))
+
+    def measure_span_s(self, key: Any = None) -> float:
+        """Wall-clock during which the backend was measuring (union of the
+        collected tickets' real intervals — not a sum, so concurrent
+        batches are not double-counted)."""
+        return _union_length(self._intervals(key))
+
+    def wait_span_s(self) -> float:
+        """Wall-clock the consuming thread spent blocked on tickets."""
+        return _union_length(self._wait_ivs)
+
+    def overlap_s(self, key: Any = None) -> float:
+        """Measurement wall-time hidden behind other (search) work: the
+        measuring span minus the part of it the consumer spent blocked —
+        by inclusion-exclusion, |measure ∪ wait| − |wait| (measuring time
+        that fell outside every wait interval)."""
+        ivs = self._intervals(key)
+        return max(0.0, _union_length(ivs + self._wait_ivs)
+                   - _union_length(self._wait_ivs))
+
+    # ---- lifecycle -------------------------------------------------------------
+    def close(self) -> None:
+        if self._owns_backend:
+            self._backend.close()
+
+    def __enter__(self) -> "MeasureScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

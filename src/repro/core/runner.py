@@ -26,6 +26,21 @@ this runner has real latency worth hiding behind search: runners that
 declare it ``True`` opt into the pipelined (speculative) tuner loop and
 interleaved sessions, while instantaneous runners keep the exact
 synchronous search trajectory (see ``tuner.effective_pipeline_depth``).
+
+Async submission protocol (optional, duck-typed)
+------------------------------------------------
+A runner may additionally expose ``submit_batch(workload, schedules)``
+returning a :class:`~repro.core.measure_scheduler.MeasureTicket` (a future:
+``done()``/``result()``), plus a ``max_inflight`` hint — how many submitted
+batches can make *physical* progress concurrently. The
+:class:`~repro.core.measure_scheduler.MeasureScheduler` then holds many
+batches from many tuning drivers in flight on the runner at once (a
+:class:`~repro.core.board_farm.BoardFarm` implements this natively with a
+cross-batch work-stealing dispatcher). Runners without it — everything in
+this module — are wrapped in the scheduler's default single-FIFO
+measurement thread (:class:`~repro.core.measure_scheduler.
+SerialMeasureQueue`) and need no changes; their ``max_inflight`` is 1:
+only one batch measures at a time, whatever is queued behind it.
 """
 
 from __future__ import annotations
@@ -52,6 +67,11 @@ class Runner(Protocol):
     # Optional (duck-typed, defaults False): True if measurement has real
     # wall-clock latency the tuner can hide search work behind.
     # overlap_capable: bool
+    # Optional (duck-typed, defaults 1): how many submitted batches make
+    # physical progress concurrently — the MeasureScheduler capacity hint.
+    # max_inflight: int
+    # Optional async submission protocol (see module docstring):
+    # def submit_batch(self, workload, schedules) -> MeasureTicket: ...
 
     def run(self, workload: Workload, schedule: Schedule) -> float:
         """Latency in seconds; inf if the candidate is invalid."""
@@ -86,6 +106,8 @@ class InterpretRunner:
     build_timeout_s: float = 60.0
     # Real wall-clock measurement: the tuner may pipeline search behind it.
     overlap_capable = True
+    # One measurement host: submitted batches progress one at a time.
+    max_inflight = 1
 
     def _prepare(self, workload: Workload,
                  schedule: Schedule) -> Callable | None:
@@ -174,6 +196,7 @@ class AnalyticRunner:
     # behind, so speculative search would only degrade quality (tuner.py
     # clamps the pipeline depth to 1 for this runner).
     overlap_capable = False
+    max_inflight = 1
 
     def run(self, workload: Workload, schedule: Schedule) -> float:
         params = space_lib.concretize(workload, self.hw, schedule)

@@ -16,19 +16,34 @@ across runs. A :class:`TuningSession` closes that gap:
   (``count * flops``), with a per-workload floor;
 - **overlap** — on runners with real measurement latency (``overlap_capable``,
   e.g. the interpret or subprocess runners) the session drives all workloads'
-  :class:`~repro.core.tuner.TuneDriver` state machines against one FIFO
-  measurement queue, so one workload's candidates are evolved while
-  another's batch is on the "board". ``pipeline_depth`` additionally lets a
-  single driver keep several batches in flight (speculative evolution
-  against predicted latencies — see ``tuner.py``). Interleaving stays
-  deterministic (reconciliation points are algorithmic, not timed), but
+  :class:`~repro.core.tuner.TuneDriver` state machines through one
+  :class:`~repro.core.measure_scheduler.MeasureScheduler`, so one
+  workload's candidates are evolved while another's batch is on the
+  "board". On a backend with a native async submission protocol (a
+  :class:`~repro.core.board_farm.BoardFarm`) the scheduler holds **every
+  driver's batches in flight concurrently** — an idle board steals shards
+  from any in-flight batch, so the farm stays busy across workload and
+  batch boundaries instead of draining one FIFO batch at a time
+  (``multi_queue=False`` forces the old single-FIFO measurement thread,
+  the comparison baseline the farm benchmarks report against).
+  ``pipeline_depth`` additionally lets a single driver keep several
+  batches in flight (speculative evolution against predicted latencies —
+  see ``tuner.py``). Interleaving stays deterministic — each driver
+  reconciles its own batches in submission order and its propose points
+  depend only on its own reconcile count, so per-workload histories are
+  bit-identical between the multi-queue and single-FIFO paths — but
   trades away *within-session* warm-start chaining: every workload's
   transfer seeds are drawn from the database as it stood when the session
   began. Instantaneous runners (the analytic model) keep the serial path
   and its chaining.
 - **reporting** — per-workload progress lines plus a session-level
-  latency/speedup summary (including measure/search overlap) committed to
-  the database.
+  latency/speedup summary committed to the database. Measure/search
+  overlap and the measurement span are *span-accurate*: the scheduler
+  records real busy/wait intervals rather than estimating overlap from
+  summed totals (which mis-counts as soon as batches run concurrently).
+  Fixed-library baselines are measured as one scheduled wave — every
+  workload's baseline in flight together — not N serial dispatch round
+  trips.
 """
 
 from __future__ import annotations
@@ -41,6 +56,7 @@ from typing import Callable, Sequence
 from repro.core import tuner
 from repro.core.database import TuningDatabase
 from repro.core.hardware import HardwareConfig
+from repro.core.measure_scheduler import MeasureScheduler
 from repro.core.runner import Runner
 from repro.core.schedule import Schedule
 from repro.core.tuner import TuneResult
@@ -82,8 +98,12 @@ class SessionResult:
     wall_time_s: float
     interleaved: bool = False
     pipeline_depth: int = 1
-    measure_time_s: float = 0.0  # total runner measurement time
+    measure_time_s: float = 0.0  # summed runner time across all batches
     overlap_s: float = 0.0  # measurement time hidden behind search
+    # span-accurate measurement wall-clock: union of the real measuring
+    # intervals (concurrent batches not double-counted); 0 when unknown
+    measure_span_s: float = 0.0
+    multi_queue: bool = False  # batches from many drivers in flight at once
     model: str = ""  # model/config name, for cross-session trend reports
     # per-board utilization / requeue counters when the runner is a board
     # farm (board_farm.BoardFarm.farm_summary); None otherwise
@@ -124,6 +144,8 @@ class SessionResult:
             "interleaved": self.interleaved,
             "pipeline_depth": self.pipeline_depth,
             "measure_time_s": self.measure_time_s,
+            "measure_span_s": self.measure_span_s,
+            "multi_queue": self.multi_queue,
             "overlap_s": self.overlap_s,
             "overlap_fraction": self.overlap_fraction,
             "board_stats": self.board_stats,
@@ -189,8 +211,13 @@ class TuningSession:
 
     ``interleave=None`` (auto) overlaps measurement and search across
     workloads whenever the runner declares ``overlap_capable``; set it
-    explicitly to force either path. ``pipeline_depth`` is the per-workload
-    in-flight batch bound (see ``tuner.tune``).
+    explicitly to force either path. ``multi_queue=None`` (auto) lets the
+    scheduler hold every driver's batches in flight concurrently whenever
+    the runner exposes a native async ``submit_batch`` (a board farm);
+    ``False`` forces the single-FIFO measurement thread (the comparison
+    baseline — per-workload results are bit-identical either way).
+    ``pipeline_depth`` is the per-workload in-flight batch bound (see
+    ``tuner.tune``).
     """
 
     hw: HardwareConfig
@@ -201,6 +228,7 @@ class TuningSession:
     batch: int = 8
     pipeline_depth: int = 1
     interleave: bool | None = None
+    multi_queue: bool | None = None
     log: Callable[[str], None] | None = None
 
     def _log(self, msg: str) -> None:
@@ -213,11 +241,27 @@ class TuningSession:
         return self.database.transfer_candidates(wl, self.hw.name,
                                                  limit=self.warm_start_limit)
 
-    def _report_for(self, index: int, n_unique: int, count: int,
-                    wl: Workload, res: TuneResult) -> WorkloadReport:
+    def _measure_baselines(self, unique) -> list[float]:
+        """Fixed-library baselines for every unique workload through one
+        scheduled wave: all baselines are submitted before any is awaited,
+        so a board farm measures them in parallel instead of N serial
+        dispatch round trips (per-workload attribution is by position)."""
         from repro.core.dispatch import fixed_library_schedule
 
-        fixed = self.runner.run(wl, fixed_library_schedule(wl, self.hw))
+        pairs = [(wl, fixed_library_schedule(wl, self.hw))
+                 for _, wl in unique]
+        scheduler = MeasureScheduler(self.runner,
+                                     multi_queue=self.multi_queue)
+        try:
+            tickets = [scheduler.submit(i, wl, [s])
+                       for i, (wl, s) in enumerate(pairs)]
+            return [t.result()[0] for t in tickets]
+        finally:
+            scheduler.close()
+
+    def _report_for(self, index: int, n_unique: int, count: int,
+                    wl: Workload, res: TuneResult,
+                    fixed: float) -> WorkloadReport:
         if not math.isfinite(fixed):  # library has no valid mapping here
             fixed = res.best_latency
         self._log(f"  [{index + 1}/{n_unique}] {wl.key()} x{count}: "
@@ -233,10 +277,11 @@ class TuningSession:
 
     # ---- execution paths -------------------------------------------------------
     def _tune_serial(self, unique, budgets,
-                     seed) -> tuple[list[TuneResult], float]:
+                     seed) -> tuple[list[TuneResult], float, float]:
         """One workload at a time; workload i+1's warm-start query sees the
         records workload i just committed (within-session chaining).
-        Returns the per-workload results and the summed overlap seconds."""
+        Returns the per-workload results, summed overlap seconds, and the
+        measurement span (serial batches: the span is the sum)."""
         results = []
         for i, ((count, wl), trials) in enumerate(zip(unique, budgets)):
             results.append(tuner.tune(
@@ -244,27 +289,28 @@ class TuningSession:
                 database=self.database, batch=self.batch,
                 warm_start=self._seeds_for(wl),
                 pipeline_depth=self.pipeline_depth))
-        return results, sum(r.overlap_s for r in results)
+        return (results, sum(r.overlap_s for r in results),
+                sum(r.measure_time_s for r in results))
 
-    def _tune_interleaved(self, unique, budgets, seed,
-                          depth) -> tuple[list[TuneResult], float]:
-        """All drivers share one FIFO measurement thread (one board): while
-        workload A's batch measures, workloads B, C, ... evolve and enqueue.
-        Submission and reconciliation order are fixed by the round-robin
-        schedule, so the result is deterministic for a given seed."""
+    def _tune_interleaved(self, unique, budgets, seed, depth,
+                          scheduler) -> tuple[list[TuneResult], float, float]:
+        """All drivers feed one MeasureScheduler: while workload A's batch
+        measures, workloads B, C, ... evolve and submit — and on a
+        multi-queue backend every driver's batches are *measured*
+        concurrently too. Each driver reconciles its own batches in
+        submission order, so per-workload results are deterministic for a
+        given seed regardless of completion order. Session-level overlap
+        and measurement span come from the scheduler's real busy/wait
+        intervals (span-accurate under concurrency, unlike the old
+        summed-totals estimate)."""
         drivers = [
             tuner.TuneDriver(wl, self.hw, self.runner, trials=trials,
                              seed=seed + i, database=self.database,
                              batch=self.batch, warm_start=self._seeds_for(wl))
             for i, ((count, wl), trials) in enumerate(zip(unique, budgets))]
-        tuner.run_pipelined(drivers, self.runner, depth)
-        # Session-level overlap from totals: the single measurement thread
-        # serializes batches, so a wait attributed to one driver can cover
-        # another driver's measurement — per-driver numbers would overcount.
-        measure_s = sum(d.measure_time_s for d in drivers)
-        wait_s = sum(d.wait_time_s for d in drivers)
+        tuner.run_scheduled(drivers, self.runner, depth, scheduler=scheduler)
         results = [d.finish(pipeline_depth=depth) for d in drivers]
-        return results, max(0.0, measure_s - wait_s)
+        return results, scheduler.overlap_s(), scheduler.measure_span_s()
 
     def tune_model(self, ops: ModelConfig, total_trials: int = 256,
                    seed: int = 0, model: str = "") -> SessionResult:
@@ -276,6 +322,15 @@ class TuningSession:
         interleave = (self.interleave if self.interleave is not None
                       else getattr(self.runner, "overlap_capable", False)
                       and len(unique) > 1)
+        # The scheduler is the authority on the effective queue mode (a
+        # multi_queue=True request degrades to single-FIFO on runners
+        # without the native submission protocol); constructing it here is
+        # cheap (no threads until the first submit) and what is logged and
+        # reported can then never diverge from what actually ran.
+        scheduler = (MeasureScheduler(self.runner,
+                                      multi_queue=self.multi_queue)
+                     if interleave else None)
+        multi_queue = scheduler.multi_queue if scheduler else False
         # Same clamp tune() applies: speculation depth > 1 only makes sense
         # against a runner with real measurement latency.
         depth = tuner.effective_pipeline_depth(self.runner,
@@ -283,16 +338,20 @@ class TuningSession:
         self._log(f"session: {len(ops)} ops -> {len(unique)} unique "
                   f"workloads, {sum(budgets)} trials on {self.runner.name}"
                   f"/{self.hw.name}"
-                  + (f" (interleaved, depth {depth})" if interleave else ""))
+                  + (f" (interleaved, depth {depth}"
+                     + (", multi-queue" if multi_queue else "") + ")"
+                     if interleave else ""))
 
         if interleave:
-            results, overlap_s = self._tune_interleaved(unique, budgets,
-                                                        seed, depth)
+            results, overlap_s, span_s = self._tune_interleaved(
+                unique, budgets, seed, depth, scheduler)
         else:
-            results, overlap_s = self._tune_serial(unique, budgets, seed)
-        reports = [self._report_for(i, len(unique), count, wl, res)
-                   for i, ((count, wl), res) in enumerate(zip(unique,
-                                                              results))]
+            results, overlap_s, span_s = self._tune_serial(unique, budgets,
+                                                           seed)
+        baselines = self._measure_baselines(unique)
+        reports = [self._report_for(i, len(unique), count, wl, res, fixed)
+                   for i, ((count, wl), res, fixed)
+                   in enumerate(zip(unique, results, baselines))]
 
         measure_s = sum(r.measure_time_s for r in results)
         summary_fn = getattr(self.runner, "farm_summary", None)
@@ -301,7 +360,9 @@ class TuningSession:
             total_trials=sum(r.trials for r in reports),
             wall_time_s=time.perf_counter() - t_start,
             interleaved=interleave, pipeline_depth=depth,
-            measure_time_s=measure_s, overlap_s=overlap_s, model=model,
+            measure_time_s=measure_s, overlap_s=overlap_s,
+            measure_span_s=span_s,
+            multi_queue=multi_queue, model=model,
             board_stats=summary_fn() if callable(summary_fn) else None)
         if self.database is not None:
             self.database.add_session(result.summary())

@@ -93,8 +93,13 @@ def postproc_block_alignment(workload: Workload, hw: HardwareConfig,
             return (f"block {params.block} breaks {sub}x{lane} "
                     f"sublane/lane alignment")
     elif params.op == "gemv":
-        if params.block[1] % lane:
-            return f"k-block {params.block[1]} not a lane multiple ({lane})"
+        bn, bk = params.block
+        if bk % lane:
+            return f"k-block {bk} not a lane multiple ({lane})"
+        if bn != 1 and bn % lane:
+            # the kernel's (1, bn) output tile: full lanes or the J=1 row
+            # form — nothing ragged in between (see gemv supports_block_shape)
+            return f"n-block {bn} neither 1 nor a lane multiple ({lane})"
     elif params.op == "vmacc":
         if params.block[0] % sub:
             return f"row-block {params.block[0]} not a sublane multiple ({sub})"
@@ -411,11 +416,39 @@ def space_for(workload: Workload, hw: HardwareConfig) -> SpaceProgram:
                              else (True, False))),
         ]
     elif workload.op == "gemv":
-        _n, k = workload.dims
+        n, k = workload.dims
+
+        def bn_candidates(ctx):
+            """Output-row (J) split: any perfect tile of the padded n
+            extent the kernel can actually lower — gated by the kernel's
+            own block-shape capability (``supports_block_shape``), up to
+            8x the variant's base rows. The J=1 fallback variant stays a
+            single-row kernel (its whole point), as does a single-row
+            workload (n = 1, what the v1 path produced for it)."""
+            from repro.kernels.gemv import ops as gemv_ops  # lazy: no cycle
+
+            base_bn = block(ctx)[0]
+            if base_bn <= 1 or n <= 1:
+                return (1,)
+            cands = tuple(
+                c for c in tile_candidates(n, lane, 8 * base_bn)
+                if gemv_ops.supports_block_shape(c, ctx["bk"], lane))
+            return cands or (base_bn,)
+
+        def legacy_bn(trace, ctx):
+            """v1 traces never split bn: reproduce the variant-derived
+            value the legacy concretize path computes, bit-identically —
+            including its min(base, n) clamp (n = 1 must stay bn = 1)."""
+            base_bn = block(ctx)[0]
+            if base_bn <= 1 or min(base_bn, n) <= 1:
+                return 1
+            return _scaled(base_bn, 1.0, min(lane, base_bn), n)
+
         ins += [
             sample_tile_split(
                 "bk", lambda ctx: tile_candidates(k, lane, block(ctx)[1]),
                 legacy=legacy_tile("k_scale", 1, k, lane)),
+            sample_tile_split("bn", bn_candidates, legacy=legacy_bn),
             sample_categorical(
                 "accumulate",
                 lambda ctx: ((True,) if round_up(k, ctx["bk"]) == ctx["bk"]
@@ -538,9 +571,12 @@ def concretize(workload: Workload, hw: HardwareConfig, schedule: Schedule,
                               vmem, True)
     elif op == "gemv":
         n, k = dims
-        bn = max(1, min(base[0], round_up(n, 1)))
-        if bn > 1:
-            bn = _scaled(base[0], 1.0, min(lane, base[0]), n)
+        if schedule.get("bn") is not None:  # v2 program trace: bn split
+            bn = max(1, int(schedule["bn"]))
+        else:  # v1 flat trace: bn is variant-derived, never split
+            bn = max(1, min(base[0], round_up(n, 1)))
+            if bn > 1:
+                bn = _scaled(base[0], 1.0, min(lane, base[0]), n)
         if schedule.get("bk") is not None:  # v2 program trace
             bk = int(schedule["bk"])
         else:

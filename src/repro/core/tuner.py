@@ -12,29 +12,41 @@ A search can be *warm-started* from schedules recorded in a previous run
 experiment): they are measured first and seed both the cost model and the
 evolutionary population.
 
-Measure/search pipelining
+Measure/search scheduling
 -------------------------
 On real hardware, measurement — not search — dominates tuning wall-time
 (9-12 s per candidate on the paper's FPGA targets). ``tune`` therefore
-supports an asynchronous producer/consumer pipeline (``pipeline_depth > 1``):
-generation N is submitted to the runner as a future and generation N+1 is
-evolved immediately against the cost model's *predicted* latencies for the
+supports an asynchronous pipeline (``pipeline_depth > 1``): generation N is
+submitted to the measurement backend and generation N+1 is evolved
+immediately against the cost model's *predicted* latencies for the
 in-flight candidates (a constant-liar strategy), reconciling when the
 measurements land.
 
-The pipeline is **deterministic by construction**: speculation and
-reconciliation points are fixed by the algorithm (the head batch is awaited
-exactly when the pipeline is full), never by wall-clock timing, so a given
-seed replays the same history in the same submission order regardless of how
-slow the runner is. Runners that measure instantaneously (the analytic
-model) declare ``overlap_capable = False``; for them the effective depth is
-clamped to 1 — there is no latency to hide, and the pipelined path then
-reproduces the synchronous trajectory bit-identically.
+Submission goes through a :class:`~repro.core.measure_scheduler.
+MeasureScheduler`, which holds **multiple batches from multiple drivers in
+flight concurrently**: runners with a native async ``submit_batch`` (a
+:class:`~repro.core.board_farm.BoardFarm`) keep every board busy across
+batch — and workload — boundaries, while plain synchronous runners are
+wrapped in the scheduler's single-FIFO measurement thread and behave
+exactly like the old one-queue pipeline.
+
+The pipeline is **deterministic by construction**: each driver's batches
+are reconciled in that driver's own submission order (per-driver FIFO), and
+a driver's propose/reconcile points depend only on its *own* reconcile
+count — so which driver happens to reconcile first (a completion-order
+observation under the multi-queue scheduler) can never leak into any
+driver's trajectory, and a given seed replays the same per-driver history
+regardless of farm shape or runner speed. Runners that measure
+instantaneously (the analytic model) declare ``overlap_capable = False``;
+for them the effective depth is clamped to 1 — there is no latency to
+hide, and the pipelined path then reproduces the synchronous trajectory
+bit-identically.
 
 The mechanics live in :class:`TuneDriver`, an explicit propose/reconcile
 state machine; :class:`~repro.core.session.TuningSession` drives several
-drivers against one measurement queue to interleave one workload's
-measurement with another's evolution.
+drivers against one scheduler to interleave one workload's measurement with
+another's evolution. Overlap accounting is span-accurate: the scheduler
+records real measuring/waiting intervals, not summed totals.
 """
 
 from __future__ import annotations
@@ -43,7 +55,6 @@ import dataclasses
 import math
 import time
 from collections import deque
-from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Sequence
 
 from repro.core import space as space_lib
@@ -51,6 +62,7 @@ from repro.core.cost_model import RidgeCostModel, features
 from repro.core.database import TuningDatabase
 from repro.core.evolution import EvolutionarySearch
 from repro.core.hardware import HardwareConfig
+from repro.core.measure_scheduler import MeasureScheduler
 from repro.core.runner import INVALID, Runner, run_batch as _run_batch
 from repro.core.sampler import TraceSampler
 from repro.core.schedule import Schedule
@@ -132,8 +144,10 @@ class TuneDriver:
         self.log = log
         # wall-time span of this driver's own activity: first propose() to
         # last reconcile() — in an interleaved session drivers are all
-        # constructed up front, so construction time would over-attribute
-        self.t_start = time.perf_counter()
+        # constructed up front, so stamping construction time here would
+        # over-attribute the session's setup (and any other driver's head
+        # start) to every driver. Set only by the first propose().
+        self.t_start: float | None = None
         self._t_last: float | None = None
         self._started = False
         # the generative design-space program (variant-conditioned tile
@@ -148,9 +162,12 @@ class TuneDriver:
         self.best_schedule: Schedule | None = None
         self.best_latency = INVALID
         self.warm_started = 0
-        # pipeline bookkeeping (written by the executor wrappers below)
-        self.measure_time_s = 0.0  # runner time, accumulated off-thread
-        self.wait_time_s = 0.0  # main-thread time blocked on futures
+        # pipeline bookkeeping (written by the scheduler loop below)
+        self.measure_time_s = 0.0  # runner time across this driver's batches
+        self.wait_time_s = 0.0  # main-thread time blocked on this driver
+        # span-accurate overlap, set by run_scheduled (None -> finish()
+        # falls back to the summed-totals estimate of the sync path)
+        self.overlap_span_s: float | None = None
         # Seeds take at most half the budget so even floor-budget workloads
         # always perform some fresh search instead of only replaying records.
         # Schedules from foreign spaces may not concretize here; skipped free.
@@ -282,20 +299,28 @@ class TuneDriver:
         if self._in_flight:
             raise RuntimeError("finish() with batches still in flight")
         summary = getattr(self.runner, "farm_summary", None)
+        # authoritative wall-time span: first propose() -> last reconcile()
+        # (zero if the driver never ran — construction time is not activity)
+        if self.t_start is None or self._t_last is None:
+            wall = 0.0
+        else:
+            wall = self._t_last - self.t_start
+        if self.overlap_span_s is not None:
+            overlap = self.overlap_span_s  # span-accurate (scheduler)
+        else:
+            overlap = max(0.0, self.measure_time_s - self.wait_time_s)
         return TuneResult(
             self.workload, self.hw, self.best_schedule, self.best_latency,
-            self.history, len(self.history),
-            (self._t_last or time.perf_counter()) - self.t_start,
+            self.history, len(self.history), wall,
             warm_started=self.warm_started, pipeline_depth=pipeline_depth,
-            measure_time_s=self.measure_time_s,
-            overlap_s=max(0.0, self.measure_time_s - self.wait_time_s),
+            measure_time_s=self.measure_time_s, overlap_s=overlap,
             board_stats=summary() if callable(summary) else None)
 
 
 def timed_run_batch(runner: Runner, driver: TuneDriver,
                     schedules: Sequence[Schedule]) -> list[float]:
-    """Measure one batch, charging its runner time to the driver (runs on
-    the measurement thread; the single-writer pattern keeps it race-free)."""
+    """Measure one batch synchronously, charging its runner time to the
+    driver (the depth-1 path of ``tune``)."""
     t0 = time.perf_counter()
     try:
         return _run_batch(runner, driver.workload, schedules)
@@ -303,18 +328,34 @@ def timed_run_batch(runner: Runner, driver: TuneDriver,
         driver.measure_time_s += time.perf_counter() - t0
 
 
-def run_pipelined(drivers: Sequence[TuneDriver], runner: Runner,
-                  depth: int) -> None:
-    """Producer/consumer loop shared by ``tune`` (one driver) and
-    interleaved sessions (one driver per workload): all drivers feed a
-    single FIFO measurement thread (one board), each holding up to
-    ``depth`` batches in flight, reconciled in submission order. The
-    round-robin fill order is fixed, so the schedule — and every driver's
-    history — is deterministic for a given seed."""
+def run_scheduled(drivers: Sequence[TuneDriver], runner: Runner,
+                  depth: int, multi_queue: bool | None = None,
+                  scheduler: MeasureScheduler | None = None
+                  ) -> MeasureScheduler:
+    """Drive one or many :class:`TuneDriver` state machines against a
+    :class:`~repro.core.measure_scheduler.MeasureScheduler`.
+
+    Every driver is topped up to ``depth`` in-flight batches (fixed
+    round-robin fill order), then the next reconcilable batch is collected:
+    per-driver FIFO always, earliest-completed-first across drivers — so on
+    a multi-queue backend (a board farm) a driver whose batch finished
+    early is refilled immediately instead of queueing behind another
+    driver's slower batch, and the backend never starves while any driver
+    has work. A driver's propose/reconcile points depend only on its own
+    reconcile count, so per-driver histories are bit-identical to the
+    single-FIFO schedule for a fixed seed (see the module docstring).
+
+    Returns the scheduler (already closed) so callers can read its
+    span-accurate measure/wait/overlap accounting; each driver's
+    ``overlap_span_s`` is stamped from it before returning. Callers that
+    need the scheduler's effective mode up front (its ``multi_queue``
+    attribute is the authority on whether the native path is in use) may
+    construct it themselves and pass it as ``scheduler``.
+    """
+    if scheduler is None:
+        scheduler = MeasureScheduler(runner, multi_queue=multi_queue)
     counts = [0] * len(drivers)
-    with ThreadPoolExecutor(max_workers=1,
-                            thread_name_prefix="measure") as ex:
-        pending: deque = deque()  # (driver index, batch, future)
+    try:
         while True:
             submitted = False
             for i, driver in enumerate(drivers):
@@ -322,19 +363,31 @@ def run_pipelined(drivers: Sequence[TuneDriver], runner: Runner,
                     batch = driver.propose()
                     if batch is None:
                         break
-                    pending.append((i, batch, ex.submit(
-                        timed_run_batch, runner, driver, batch)))
+                    scheduler.submit(i, driver.workload, batch)
                     counts[i] += 1
                     submitted = True
-            if pending:
-                i, batch, fut = pending.popleft()
-                t0 = time.perf_counter()
-                latencies = fut.result()
-                drivers[i].wait_time_s += time.perf_counter() - t0
+            if scheduler.inflight():
+                i, batch, latencies, wait_s, measure_s = \
+                    scheduler.collect_next()
+                drivers[i].wait_time_s += wait_s
+                drivers[i].measure_time_s += measure_s
                 drivers[i].reconcile(batch, latencies)
                 counts[i] -= 1
             elif not submitted:
                 break
+    finally:
+        scheduler.close()
+        for i, driver in enumerate(drivers):
+            driver.overlap_span_s = scheduler.overlap_s(i)
+    return scheduler
+
+
+def run_pipelined(drivers: Sequence[TuneDriver], runner: Runner,
+                  depth: int) -> None:
+    """Single-FIFO compatibility wrapper over :func:`run_scheduled`
+    (``multi_queue=False``): all drivers feed one measurement thread, the
+    pre-scheduler behaviour benchmarks compare against."""
+    run_scheduled(drivers, runner, depth, multi_queue=False)
 
 
 def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
@@ -357,14 +410,16 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
             latencies = timed_run_batch(runner, driver, batch_s)
             driver.reconcile(batch_s, latencies)
         driver.wait_time_s = driver.measure_time_s  # nothing overlapped
+        driver.overlap_span_s = 0.0
     else:
-        # Even when clamped to depth 1, run through the executor so the
+        # Even when clamped to depth 1, run through the scheduler so the
         # asynchronous plumbing is exercised (and verified bit-identical).
-        run_pipelined([driver], runner, depth)
+        run_scheduled([driver], runner, depth)
         if depth == 1:
             # at depth 1 nothing can overlap; don't let scheduling jitter
-            # between submit and result() report as spurious overlap
+            # between submit and collect report as spurious overlap
             driver.wait_time_s = driver.measure_time_s
+            driver.overlap_span_s = 0.0
     if database is not None and database.path:
         database.save()
     return driver.finish(pipeline_depth=depth)

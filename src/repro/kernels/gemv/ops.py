@@ -1,4 +1,4 @@
-"""Jitted wrapper for the GEMV kernel."""
+"""Jitted wrapper for the GEMV kernel, plus its block-shape capability."""
 
 from __future__ import annotations
 
@@ -7,6 +7,25 @@ import jax.numpy as jnp
 
 from repro.core.space import KernelParams
 from repro.kernels.gemv.kernel import gemv_pallas
+
+
+def supports_block_shape(bn: int, bk: int, lane: int) -> bool:
+    """Kernel-side generality check for a (bn, bk) block.
+
+    The Pallas kernel tiles x as ``(1, bk)``, w as ``(bk, bn)`` and the
+    output (plus the VMEM accumulator) as ``(1, bn)``; both grid axes cover
+    the padded extents exactly. That lowers for any positive ``bk`` that is
+    a lane multiple and any ``bn`` that is either a lane multiple (a full
+    output tile per step) or exactly 1 (the paper's J=1 fallback row
+    kernel). Ragged ``bn`` between 1 and a lane would leave a partially
+    masked last-dim store the kernel does not implement — the design-space
+    program consults this before offering a ``bn`` split candidate.
+    """
+    if bn < 1 or bk < 1:
+        return False
+    if bk % lane:
+        return False
+    return bn == 1 or bn % lane == 0
 
 
 def build(params: KernelParams, interpret: bool = True):

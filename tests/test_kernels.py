@@ -78,6 +78,30 @@ def test_gemv_sweep(n, k):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("bn_tiles", [2, 4])
+def test_gemv_bn_split_kernel_correct(bn_tiles):
+    """The widened bn (output-row) split lowers and computes correctly:
+    a multi-lane bn block — impossible before the split, when bn was
+    variant-derived — matches the reference."""
+    wl = W.gemv(64, 96)
+    lane = HW.lane_align(wl.dtype)
+    space = space_for(wl, HW)
+    bn = bn_tiles * lane
+    variant = next(v for v in space["variant"] if v != "j1")
+    s = space.replay({"variant": variant, "bn": bn}, TraceSampler(0).rng)
+    assert s["bn"] == bn  # the pinned split survived coherent replay
+    from repro.kernels.gemv.ops import supports_block_shape
+    assert supports_block_shape(bn, s["bk"], lane)
+    p = concretize(wl, HW, s)
+    assert p.valid, p.why_invalid
+    assert p.block[0] == bn
+    fn = kernels.build(wl, p, interpret=True)
+    x, w = wl.example_inputs()
+    np.testing.assert_allclose(np.asarray(fn(x, w)),
+                               np.asarray(x, np.float32) @ w, rtol=1e-4,
+                               atol=1e-3)
+
+
 def test_gemv_j1_variant():
     """The paper's J=1 fallback intrinsic must be registered and correct."""
     from repro.core import intrinsics
