@@ -228,10 +228,23 @@ def space_cardinality() -> None:
         traces = prog.cardinality()
         emit(f"space/{name}/v2_configs", float(v2),
              f"v1={v1} ratio={v2 / max(v1, 1):.2f}x traces={traces}")
-        if name in ("matmul", "qmatmul", "gemv"):
+        if name in ("matmul", "qmatmul", "gemv", "vmacc"):
             assert v2 > v1, (
                 f"{name}: program space ({v2}) must be strictly larger "
                 f"than the v1 flat space ({v1})")
+        if name == "vmacc":
+            # the bc (column) axis is a real split now, not a
+            # variant-derived constant: several kernel-lowerable candidates
+            # must exist for a wide-c workload (gated by the kernel's
+            # supports_block_shape check)
+            ctx = {"variant": prog["variant"][0]}
+            ctx["br"] = prog.candidates("br", ctx)[0]
+            bc_cands = prog.candidates("bc", ctx)
+            emit("space/vmacc/bc_axis", float(len(bc_cands)),
+                 f"candidates={list(bc_cands)}")
+            assert len(bc_cands) >= 2, (
+                f"vmacc bc axis collapsed to {bc_cands}: the column "
+                f"split should offer multiple kernel-supported tiles")
         if name == "gemv":
             # the bn (output-row / J) axis is a real split now, not a
             # variant-derived constant: several kernel-lowerable candidates
@@ -373,6 +386,67 @@ def farm_suite(trials: int = 4) -> None:
          f"invalid_after_retries={summary['invalid_after_retries']}")
 
 
+# ------------------------------------------------------ learned proposals ----
+
+def learn_suite(trials: int = 48) -> None:
+    """Learned proposals vs uniform sampling at equal budget — the
+    measurements-to-target comparison behind the probabilistic-program
+    refactor. For each workload: seed a database by tuning a *neighboring*
+    shape, then tune the target twice with the same seed — once with
+    proposal learning off (the pre-refactor uniform sampler), once with the
+    proposals warm-started from the database's transferred posteriors
+    (``transfer_distributions``). The learned search must reach the uniform
+    search's best latency using **no more measurements** (fewer on at least
+    one workload) — measurement count is the scarce resource once boards
+    are real (9-12 s per candidate in the paper). Deterministic: analytic
+    runner, fixed seeds. Doubles as the CI learn smoke."""
+    cases = [
+        ("matmul", W.matmul(512, 2048, 2048, "bfloat16"),
+         W.matmul(1024, 2048, 2048, "bfloat16")),
+        ("gemv", W.gemv(2048, 8192, "bfloat16"),
+         W.gemv(2048, 4096, "bfloat16")),
+        ("vmacc", W.vmacc(2048, 2048), W.vmacc(1024, 2048)),
+    ]
+    runner = AnalyticRunner(V5E)
+    fewer = 0
+    for name, target, neighbor in cases:
+        db = TuningDatabase()
+        tune(neighbor, V5E, runner, trials=trials, seed=0, database=db)
+        uniform = tune(target, V5E, runner, trials=trials, seed=1,
+                       learn_proposals=False)
+        priors = db.transfer_distributions(target, V5E.name)
+        learned = tune(target, V5E, runner, trials=trials, seed=1,
+                       prior_distributions=priors)
+        goal = uniform.best_latency * (1 + 1e-9)
+
+        def count_to_goal(res):
+            for i, (_s, lat) in enumerate(res.history):
+                if lat <= goal:
+                    return i + 1
+            return None
+
+        n_uniform = count_to_goal(uniform)
+        n_learned = count_to_goal(learned)
+        emit(f"learn/{name}/learned_best", learned.best_latency * 1e6,
+             f"uniform_best={uniform.best_latency * 1e6:.2f} "
+             f"measurements_to_target={n_learned}/{n_uniform} "
+             f"entropy={learned.mean_proposal_entropy:.2f} "
+             f"prior_decisions={len(priors)}")
+        assert n_learned is not None, (
+            f"{name}: learned proposals never reached the uniform search's "
+            f"best latency within {trials} measurements")
+        assert n_learned <= n_uniform, (
+            f"{name}: learned proposals needed {n_learned} measurements to "
+            f"reach the uniform best; uniform needed {n_uniform}")
+        if n_learned < n_uniform:
+            fewer += 1
+    emit("learn/workloads_with_fewer_measurements", float(fewer),
+         f"of {len(cases)}")
+    assert fewer >= 1, (
+        "learned proposals matched but never beat the uniform measurement "
+        "count on any workload")
+
+
 # ---------------------------------------------------- cross-hw transfer ----
 
 def transfer_study(trials: int = 16) -> None:
@@ -440,9 +514,17 @@ def session_report(db: TuningDatabase) -> list[tuple[str, float, str]]:
             speedup = s.get("speedup_vs_fixed")
             speedup_txt = (f"{speedup:.2f}x"
                            if isinstance(speedup, (int, float)) else "n/a")
+            # proposal-convergence trend: mean normalized posterior entropy
+            # at session end (1.0 = uniform; falling across sessions =
+            # the proposals are learning); n/a for pre-learning sessions
+            # or learning-off runs (sanitized NaN -> None)
+            entropy = s.get("proposal_entropy")
+            entropy_txt = (f"{entropy:.2f}"
+                           if isinstance(entropy, (int, float)) else "n/a")
             rows.append((f"report/{model}/session{i}", tuned * 1e6,
                          f"{trend} speedup_vs_fixed={speedup_txt} "
                          f"overlap={overlap_txt} "
+                         f"entropy={entropy_txt} "
                          f"trials={s.get('total_trials', '?')}"))
             prev_latency = tuned
             best_latency = min(best_latency, tuned)
@@ -548,6 +630,7 @@ SUITES = {
     "tuning_cost": tuning_cost,
     "farm": farm_suite,
     "transfer": transfer_study,
+    "learn": learn_suite,
 }
 
 _NO_TRIALS_ARG = ("tuning_cost", "space")

@@ -10,11 +10,12 @@ from repro.core.hardware import (HardwareConfig, V5E, V5E_VMEM32, V5E_VMEM64,
 from repro.core.workload import (Workload, matmul, qmatmul, gemv, vmacc,
                                  attention)
 from repro.core.schedule import Schedule, Decision
-from repro.core.space import (space_for, concretize, KernelParams,
-                              SpaceProgram, flat_space_v1, tile_candidates,
-                              v1_distinct_configs)
+from repro.core.space import (space_for, concretize, DecisionDistribution,
+                              KernelParams, SpaceProgram, flat_space_v1,
+                              tile_candidates, v1_distinct_configs)
 from repro.core.sampler import TraceSampler
-from repro.core.cost_model import RidgeCostModel, features
+from repro.core.cost_model import (RidgeCostModel, features,
+                                   pretrain_from_database)
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
                                xla_latency)
 from repro.core.measure_pool import MeasurePool, SubprocessRunner
@@ -35,8 +36,9 @@ __all__ = [
     "HardwareConfig", "V5E", "V5E_VMEM32", "V5E_VMEM64", "V5E_MXU256",
     "INTERPRET", "SWEEP", "Workload", "matmul", "qmatmul", "gemv", "vmacc",
     "attention", "Schedule", "Decision", "space_for", "concretize",
-    "KernelParams", "SpaceProgram", "flat_space_v1", "tile_candidates",
-    "v1_distinct_configs", "TraceSampler", "RidgeCostModel", "features",
+    "DecisionDistribution", "KernelParams", "SpaceProgram", "flat_space_v1",
+    "tile_candidates", "v1_distinct_configs", "TraceSampler",
+    "RidgeCostModel", "features", "pretrain_from_database",
     "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
     "MeasureScheduler", "MeasureTicket", "SerialMeasureQueue",
     "Board", "BoardDied", "BoardFarm", "BoardStats", "Fault", "FarmDead",

@@ -137,3 +137,43 @@ class RidgeCostModel:
         """Indices sorted by predicted latency, ascending."""
         preds = np.asarray([self.predict(f) for f in feats_batch])
         return np.argsort(preds, kind="stable")
+
+
+def pretrain_from_database(model: RidgeCostModel, database,
+                           hw: HardwareConfig) -> int:
+    """Cold-start a cost model from a tuning database's measured records.
+
+    Every finite-latency record measured on *this* hardware config — any
+    workload, any op family — is replayed through ``features`` and folded
+    into the model's sufficient statistics, so the first generations of a
+    warm-database search are ranked by real evidence instead of an unfitted
+    model's constant 0.0. Cross-hardware records are skipped: their
+    latencies are not comparable and would mis-calibrate the fit. Returns
+    the number of records folded in (deterministic: insertion order of the
+    database's key/record lists).
+    """
+    suffix = "@" + hw.name
+    n = 0
+    for key, recs in database.records.items():
+        if not key.endswith(suffix):
+            continue
+        wl_json = database.workloads.get(key)
+        if wl_json is None:
+            continue
+        workload = Workload.from_json(wl_json)
+        for rec in recs:
+            latency = rec.get("latency_s")
+            if latency is None or not math.isfinite(latency) or latency <= 0:
+                continue
+            schedule = _schedule_from_json(rec["schedule"])
+            params = space_lib.concretize(workload, hw, schedule)
+            if not params.valid:
+                continue  # foreign-space record that doesn't lower here
+            model.update(features(workload, hw, params), latency)
+            n += 1
+    return n
+
+
+def _schedule_from_json(blob):
+    from repro.core.schedule import Schedule  # lazy: keep deps one-way
+    return Schedule.from_json(blob)

@@ -11,6 +11,15 @@ Beyond exact lookups the database answers *transfer* queries
 family on other shapes or hardware configs, used to warm-start new searches
 (the paper's Fig. 4 schedule-transfer experiment), and stores session-level
 latency/speedup summaries from :class:`repro.core.session.TuningSession`.
+
+Searches also persist their **learned proposal posteriors** (the per-decision
+:class:`~repro.core.space.DecisionDistribution` evidence, serialized under an
+optional ``"dist"`` payload block — v2 databases without it stay loadable).
+:meth:`transfer_distributions` is the distribution-level sibling of
+:meth:`transfer_candidates`: it blends the stored posteriors of same-op-family
+records, closest shape first, into ``{decision: {value: weight}}`` priors a
+new search seeds its program with (Fig. 4 transfer upgraded from warm-start
+traces to warm-start distributions).
 """
 
 from __future__ import annotations
@@ -22,6 +31,7 @@ import tempfile
 from typing import Any
 
 from repro.core.schedule import Schedule
+from repro.core.space import DecisionDistribution
 from repro.core.workload import Workload
 
 
@@ -33,6 +43,9 @@ class TuningDatabase:
         self.workloads: dict[str, dict] = {}
         # session-level summaries, append-only (see TuningSession)
         self.sessions: list[dict[str, Any]] = []
+        # key -> {decision_name: serialized DecisionDistribution} — the
+        # learned proposal posteriors of the last search on that key
+        self.distributions: dict[str, dict[str, dict]] = {}
         # memoized best() lookups (serving-path dispatch cache): key ->
         # (Schedule, latency) | None, invalidated per-key by add() and
         # wholesale by load(). Schedules are immutable, so sharing the
@@ -79,6 +92,23 @@ class TuningDatabase:
         Non-finite floats (e.g. a NaN speedup when nothing tuned) are
         sanitized to ``None`` so the stored payload stays strict JSON."""
         self.sessions.append(_json_sanitize(dict(summary)))
+
+    def set_distributions(self, workload: Workload, hw_name: str,
+                          dists: dict[str, dict]) -> None:
+        """Store (replace) the learned proposal posteriors of one search —
+        ``{decision_name: DecisionDistribution.to_json()}``. Later searches
+        on the key overwrite: the posterior already folds prior evidence in
+        (a warm-started search seeds from it and keeps accumulating)."""
+        if not dists:
+            return
+        key = self.record_key(workload, hw_name)
+        self.workloads[key] = workload.to_json()
+        self.distributions[key] = _json_sanitize(dists)
+
+    def get_distributions(self, workload: Workload,
+                          hw_name: str) -> dict[str, dict]:
+        """Stored proposal posteriors of one key ({} if never recorded)."""
+        return self.distributions.get(self.record_key(workload, hw_name), {})
 
     # ---- queries ---------------------------------------------------------------
     def best(self, workload: Workload,
@@ -146,6 +176,49 @@ class TuningDatabase:
                 break
         return out
 
+    def transfer_distributions(self, workload: Workload, hw_name: str,
+                               limit: int = 4) -> dict[str, dict[Any, float]]:
+        """Blended proposal priors for a new search — the distribution-level
+        sibling of :meth:`transfer_candidates`.
+
+        The stored posteriors of up to ``limit`` same-op-family keys are
+        blended, closest shape first (exact key always leads), each source
+        normalized then weighted by ``1 / (1 + shape_distance)`` so near-miss
+        evidence dominates far evidence. Returns ``{decision_name: {value:
+        weight}}``, ready for :meth:`SpaceProgram.seed_priors`; values the
+        new program never offers simply never match a candidate set."""
+        exact_key = self.record_key(workload, hw_name)
+        scored: list[tuple[float, str, dict]] = []
+        for key, dists in self.distributions.items():
+            if not dists:
+                continue
+            wl_json = self.workloads.get(key)
+            if wl_json is None or wl_json.get("op") != workload.op:
+                continue
+            if key == exact_key:
+                distance = -1.0  # always first
+            else:
+                distance = _shape_distance(workload.dims,
+                                           tuple(wl_json.get("dims", ())))
+            if math.isinf(distance):
+                continue
+            scored.append((distance, key, dists))
+        scored.sort(key=lambda t: t[:2])
+        out: dict[str, dict[Any, float]] = {}
+        for distance, _key, dists in scored[:limit]:
+            source_w = 1.0 / (1.0 + max(distance, 0.0))
+            for name, blob in dists.items():
+                d = DecisionDistribution.from_json(blob)
+                values = tuple(sorted(d.mass, key=str))
+                if not values:
+                    continue
+                # blend each source's normalized posterior (smoothed mean
+                # rewards), not raw mass — frequency must not leak in
+                tgt = out.setdefault(name, {})
+                for v, score in zip(values, d.weights(values)):
+                    tgt[v] = tgt.get(v, 0.0) + source_w * score
+        return out
+
     def __len__(self):
         return sum(len(v) for v in self.records.values())
 
@@ -155,7 +228,7 @@ class TuningDatabase:
         if path is None:
             raise ValueError("no path configured")
         payload = {"records": self.records, "workloads": self.workloads,
-                   "sessions": self.sessions}
+                   "sessions": self.sessions, "dist": self.distributions}
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
         try:
@@ -177,6 +250,7 @@ class TuningDatabase:
         self.records = payload.get("records", {})
         self.workloads = payload.get("workloads", {})
         self.sessions = payload.get("sessions", [])
+        self.distributions = payload.get("dist", {})  # optional: v2 payloads
         self._best_cache.clear()
 
 

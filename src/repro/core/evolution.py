@@ -1,9 +1,17 @@
-"""Evolutionary search over schedule traces, guided by the cost model.
+"""Evolutionary search over schedule traces, guided by two learned models.
 
 MetaSchedule's search: keep a population of traces, mutate/crossover via
 trace replay on the design-space program, rank with the learned cost model,
-measure the top predicted candidates, repeat. Measured warm-start schedules
-— including v1 flat records from the database — are *adopted* onto the
+measure the top predicted candidates, repeat. Two feedback loops steer it:
+the **cost model** ranks candidates before measurement, and the program's
+**learned proposal distributions** shape where candidates come from in the
+first place — immigrants, the fresh-sample fill of :meth:`seed_population`,
+and the `propose` fallback all draw through
+``sampler.sample(self.space)``, and mutation picks alternatives by
+posterior weight, so once the tuner has fed measured rewards back into the
+program (:meth:`SpaceProgram.observe`) every generation is biased toward
+decisions that produced fast schedules. Measured warm-start schedules —
+including v1 flat records from the database — are *adopted* onto the
 program (replayed with legacy translation) before they seed the population,
 so every population member shares the program's decision layout and
 mutation/crossover stay coherent.

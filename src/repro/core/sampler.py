@@ -1,7 +1,17 @@
 """Probabilistic sampling, mutation, and crossover of schedule traces.
 
 This is the probabilistic-program part of the search: a schedule is the
-recorded trace of a :class:`~repro.core.space.SpaceProgram` execution.
+recorded trace of a :class:`~repro.core.space.SpaceProgram` execution, and
+every draw flows through the program's **learned proposal distributions**
+(:class:`~repro.core.space.DecisionDistribution`). Fresh samples and
+replayed resamples draw from each decision's posterior; mutation picks an
+alternative for the perturbed site by posterior weight rather than
+uniformly, so once measurements have trained the proposals the search
+spends its perturbations where fast schedules live. With no evidence every
+one of those draws degrades to the exact uniform index draw of the
+pre-learned sampler (same ``rng.integers`` stream — the determinism
+contract the tests pin).
+
 Mutation and crossover never edit traces in place — they pin an edited set
 of decisions and *replay the program*, so decisions downstream of an edit
 see refreshed candidate sets (change the intrinsic variant and the tile
@@ -55,9 +65,15 @@ class TraceSampler:
         pinned = schedule.as_dict()
         for i in picked:
             d = sites[int(i)]
-            alternatives = [c for c in d.candidates if c != d.choice]
-            pinned[d.name] = alternatives[
-                int(self.rng.integers(len(alternatives)))]
+            alternatives = tuple(c for c in d.candidates if c != d.choice)
+            dist = program.dist(d.name)
+            if dist is not None:
+                # posterior-weighted alternative; no evidence -> the same
+                # uniform rng.integers draw as before (bit-identical)
+                pinned[d.name] = dist.draw(alternatives, self.rng)
+            else:  # legacy-layout site the program doesn't know (e.g. m_scale)
+                pinned[d.name] = alternatives[
+                    int(self.rng.integers(len(alternatives)))]
         # legacy=pinned: a mutated v1-layout decision (e.g. m_scale) still
         # flows through the translation hooks instead of being dropped.
         return program.replay(pinned, self.rng, legacy=pinned)

@@ -10,7 +10,10 @@ across runs. A :class:`TuningSession` closes that gap:
   ``workload.key()``; repeated layers tune once and share the result;
 - **warm start** — each search is seeded with the best near-miss records
   already in the :class:`TuningDatabase` (same key from a prior session, or
-  the same op family at a neighbouring shape/hardware — Fig. 4 transfer);
+  the same op family at a neighbouring shape/hardware — Fig. 4 transfer),
+  *and* with the blended proposal posteriors those prior searches learned
+  (``transfer_distributions`` -> ``SpaceProgram.seed_priors``), so a new
+  search starts sampling where related searches found fast schedules;
 - **shared budget** — a single trial budget is split across the unique
   workloads, weighted by their contribution to model latency
   (``count * flops``), with a per-workload floor;
@@ -77,6 +80,9 @@ class WorkloadReport:
     warm_started: int  # database warm-start candidates measured
     fixed_latency: float  # hand-written library baseline on this runner
     wall_time_s: float
+    # mean normalized proposal entropy at search end (1.0 = uniform,
+    # -> 0 = converged; NaN when proposal learning was off)
+    proposal_entropy: float = float("nan")
 
     @property
     def total_latency(self) -> float:
@@ -116,6 +122,16 @@ class SessionResult:
         return self.overlap_s / self.measure_time_s
 
     @property
+    def mean_proposal_entropy(self) -> float:
+        """Session-level proposal-convergence indicator: mean of the
+        per-workload entropies (NaN when learning was off everywhere)."""
+        vals = [r.proposal_entropy for r in self.reports
+                if math.isfinite(r.proposal_entropy)]
+        if not vals:
+            return float("nan")
+        return sum(vals) / len(vals)
+
+    @property
     def tuned_latency(self) -> float:
         return sum(r.total_latency for r in self.reports)
 
@@ -148,6 +164,7 @@ class SessionResult:
             "multi_queue": self.multi_queue,
             "overlap_s": self.overlap_s,
             "overlap_fraction": self.overlap_fraction,
+            "proposal_entropy": self.mean_proposal_entropy,
             "board_stats": self.board_stats,
             "workloads": [{
                 "key": r.workload.key(),
@@ -156,6 +173,7 @@ class SessionResult:
                 "best_latency_s": r.best_latency,
                 "warm_started": r.warm_started,
                 "speedup_vs_fixed": r.speedup_vs_fixed,
+                "proposal_entropy": r.proposal_entropy,
             } for r in self.reports],
         }
 
@@ -217,7 +235,11 @@ class TuningSession:
     ``False`` forces the single-FIFO measurement thread (the comparison
     baseline — per-workload results are bit-identical either way).
     ``pipeline_depth`` is the per-workload in-flight batch bound (see
-    ``tuner.tune``).
+    ``tuner.tune``). ``learn_proposals`` turns the per-decision proposal
+    learning on (default) — each search is then additionally warm-started
+    from the blended posteriors prior same-op-family searches stored in the
+    database; ``pretrain_cost_model`` folds the database's records into
+    each search's cost model before its first generation.
     """
 
     hw: HardwareConfig
@@ -229,6 +251,8 @@ class TuningSession:
     pipeline_depth: int = 1
     interleave: bool | None = None
     multi_queue: bool | None = None
+    learn_proposals: bool = True
+    pretrain_cost_model: bool = False
     log: Callable[[str], None] | None = None
 
     def _log(self, msg: str) -> None:
@@ -240,6 +264,14 @@ class TuningSession:
             return []
         return self.database.transfer_candidates(wl, self.hw.name,
                                                  limit=self.warm_start_limit)
+
+    def _priors_for(self, wl: Workload) -> dict | None:
+        """Blended proposal priors from the database (None when learning is
+        off, there is no database, or nothing transferable was stored)."""
+        if self.database is None or not self.learn_proposals:
+            return None
+        return self.database.transfer_distributions(
+            wl, self.hw.name, limit=self.warm_start_limit) or None
 
     def _measure_baselines(self, unique) -> list[float]:
         """Fixed-library baselines for every unique workload through one
@@ -273,7 +305,8 @@ class TuningSession:
             workload=wl, count=count, trials=res.trials,
             best_latency=res.best_latency, best_schedule=res.best_schedule,
             warm_started=res.warm_started, fixed_latency=fixed,
-            wall_time_s=res.wall_time_s)
+            wall_time_s=res.wall_time_s,
+            proposal_entropy=res.mean_proposal_entropy)
 
     # ---- execution paths -------------------------------------------------------
     def _tune_serial(self, unique, budgets,
@@ -288,7 +321,10 @@ class TuningSession:
                 wl, self.hw, self.runner, trials=trials, seed=seed + i,
                 database=self.database, batch=self.batch,
                 warm_start=self._seeds_for(wl),
-                pipeline_depth=self.pipeline_depth))
+                pipeline_depth=self.pipeline_depth,
+                learn_proposals=self.learn_proposals,
+                prior_distributions=self._priors_for(wl),
+                pretrain_cost_model=self.pretrain_cost_model))
         return (results, sum(r.overlap_s for r in results),
                 sum(r.measure_time_s for r in results))
 
@@ -306,7 +342,10 @@ class TuningSession:
         drivers = [
             tuner.TuneDriver(wl, self.hw, self.runner, trials=trials,
                              seed=seed + i, database=self.database,
-                             batch=self.batch, warm_start=self._seeds_for(wl))
+                             batch=self.batch, warm_start=self._seeds_for(wl),
+                             learn_proposals=self.learn_proposals,
+                             prior_distributions=self._priors_for(wl),
+                             pretrain_cost_model=self.pretrain_cost_model)
             for i, ((count, wl), trials) in enumerate(zip(unique, budgets))]
         tuner.run_scheduled(drivers, self.runner, depth, scheduler=scheduler)
         results = [d.finish(pipeline_depth=depth) for d in drivers]

@@ -1,12 +1,12 @@
-"""Generative design-space programs and schedule concretization.
+"""Generative design-space programs with learned per-decision proposals.
 
 The paper's central device is tuning via *probabilistic programs*: a
-generative schedule program whose sampling decisions depend on one another
-and whose illegal traces are rejected by postprocessors. ``space_for``
-builds that program for a workload on a hardware config as a
-:class:`SpaceProgram` — an ordered list of sampling instructions
-(``sample_categorical``, ``sample_tile_split``) executed by a trace
-interpreter:
+generative schedule program whose sampling decisions depend on one another,
+whose illegal traces are rejected by postprocessors, and whose **proposal
+distributions are learned from measured outcomes**. ``space_for`` builds
+that program for a workload on a hardware config as a :class:`SpaceProgram`
+— an ordered list of sampling instructions (``sample_categorical``,
+``sample_tile_split``) executed by a trace interpreter:
 
 - the **intrinsic variant** draw comes first (the paper's multi-VL
   registration);
@@ -19,6 +19,23 @@ interpreter:
 - the **accumulate** draw conditions on the chosen k-split: a schedule with
   a single k-step has nothing to re-visit, so only the accumulate-in-VMEM
   form is sampled (Algorithm 1).
+
+Every instruction carries a :class:`DecisionDistribution` — a smoothed
+per-candidate categorical posterior over the values this decision has been
+observed to choose, under a uniform prior. ``sample``/``replay`` draw
+resampled decisions *through* the distribution: with no evidence the draw
+is bit-identical to a uniform index draw (uniform prior ⇒ the same
+``rng.integers`` stream as the pre-learned sampler), and as measured
+outcomes arrive (:meth:`SpaceProgram.observe`, fed rank-relative rewards by
+the tuner) the proposals tilt toward decisions that produced fast
+schedules. Posterior mass is keyed by candidate *value*, so the dynamic
+candidate sets (a different variant ⇒ different tile splits) re-map
+cleanly: only the values present in the freshly computed set weigh in.
+Distributions serialize (:meth:`SpaceProgram.dists_to_json`) alongside
+schedules in the tuning database, and
+``TuningDatabase.transfer_distributions`` blends them across shapes and
+hardware into a new search's priors — the paper's Fig. 4 transfer
+mechanism, upgraded from warm-start traces to warm-start *distributions*.
 
 Mutation and crossover are *trace replay* (:meth:`SpaceProgram.replay`):
 pin edited decisions and re-execute the program so dependent candidate sets
@@ -37,6 +54,7 @@ reject illegal traces.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Iterator, Mapping
 
 from repro.core import intrinsics
@@ -101,8 +119,11 @@ def postproc_block_alignment(workload: Workload, hw: HardwareConfig,
             # form — nothing ragged in between (see gemv supports_block_shape)
             return f"n-block {bn} neither 1 nor a lane multiple ({lane})"
     elif params.op == "vmacc":
-        if params.block[0] % sub:
-            return f"row-block {params.block[0]} not a sublane multiple ({sub})"
+        br, bc = params.block
+        if br % sub:
+            return f"row-block {br} not a sublane multiple ({sub})"
+        if bc % lane:
+            return f"col-block {bc} not a lane multiple ({lane})"
     return ""
 
 
@@ -138,6 +159,145 @@ def apply_postprocessors(workload: Workload, hw: HardwareConfig,
 
 
 # =============================================================================
+# Learned proposal distributions.
+# =============================================================================
+
+class DecisionDistribution:
+    """Per-candidate categorical posterior for one sampling decision.
+
+    Evidence is reward *mass* and observation *count* keyed by candidate
+    value (``observe``: one measured trace contributed ``reward`` to the
+    value its decision chose). Each candidate's score is its posterior-mean
+    reward — ``(0.5*alpha + mass) / (alpha + count)``, a Beta-style estimate
+    smoothed toward the neutral reward 0.5 by ``alpha`` pseudo-observations
+    — and the proposal over a concrete candidate set normalizes those
+    scores. Mean reward (not total mass) is deliberate: a value sampled
+    often with mediocre outcomes must not outweigh a value sampled once
+    with an excellent one. Properties:
+
+    - **no evidence ⇒ exactly uniform**: every score is 0.5, and drawing
+      falls back to the plain ``rng.integers(len(cands))`` index draw,
+      bit-identical to the pre-learned sampler (the determinism contract
+      the tuner tests pin);
+    - **value-keyed re-mapping**: candidate sets are dynamic (they condition
+      on upstream choices), so scores are looked up per value — a value
+      absent from the current set simply doesn't participate, and evidence
+      survives candidate-set changes without index bookkeeping;
+    - **transferable**: evidence is plain ``{value: float}`` data, so
+      posteriors blend across shapes/hardware (``seed_prior`` folds a
+      foreign posterior in as ``strength`` pseudo-observations — the
+      Fig. 4 warm-start mechanism on distributions instead of traces).
+    """
+
+    def __init__(self, alpha: float = 1.0):
+        self.alpha = alpha
+        self.mass: dict[Any, float] = {}   # accumulated reward per value
+        self.count: dict[Any, float] = {}  # observations per value
+
+    # ---- evidence ----------------------------------------------------------
+    def observe(self, value: Any, reward: float) -> None:
+        """Fold one measured outcome in. ``reward`` must be >= 0 (the tuner
+        uses rank-relative latency in (0, 1), so scale-free across analytic
+        and real-board runners)."""
+        if not (reward >= 0.0) or not math.isfinite(reward):
+            return
+        self.mass[value] = self.mass.get(value, 0.0) + reward
+        self.count[value] = self.count.get(value, 0.0) + 1.0
+
+    def seed_prior(self, weights: Mapping[Any, float],
+                   strength: float = 8.0) -> None:
+        """Blend a foreign posterior in as ``strength`` pseudo-observations,
+        split evenly across its positive-weight values, each carrying a
+        synthetic reward proportional to its weight (the best transferred
+        value gets reward 1.0, the rest scale down) — so relative ordering
+        transfers without frequency bias. Values the current program never
+        offers simply never match a candidate set."""
+        pos = {v: w for v, w in weights.items()
+               if w > 0 and math.isfinite(w)}
+        if not pos or strength <= 0:
+            return
+        top = max(pos.values())
+        share = strength / len(pos)
+        for v, w in pos.items():
+            self.mass[v] = self.mass.get(v, 0.0) + share * (w / top)
+            self.count[v] = self.count.get(v, 0.0) + share
+
+    def evidence(self, cands: tuple) -> float:
+        """Total observation count the values of this candidate set carry."""
+        return sum(self.count.get(c, 0.0) for c in cands)
+
+    @property
+    def n_observations(self) -> float:
+        return sum(self.count.values())
+
+    # ---- posterior ---------------------------------------------------------
+    def weights(self, cands: tuple) -> list[float]:
+        """Normalized proposal over ``cands``: each candidate's smoothed
+        posterior-mean reward, normalized. No evidence ⇒ exactly uniform."""
+        a = max(self.alpha, 1e-9)
+        raw = [(0.5 * a + self.mass.get(c, 0.0))
+               / (a + self.count.get(c, 0.0)) for c in cands]
+        total = sum(raw)
+        return [r / total for r in raw]
+
+    def draw(self, cands: tuple, rng) -> Any:
+        """Draw one candidate. With no evidence among ``cands`` (or a
+        singleton set) this is the legacy uniform index draw — the same
+        ``rng.integers`` call, consuming the identical rng stream — so an
+        unevidenced program samples bit-identically to the pre-learned
+        sampler. With evidence, an inverse-CDF draw over the posterior."""
+        if len(cands) <= 1 or self.evidence(cands) <= 0.0:
+            return cands[int(rng.integers(len(cands)))]
+        u = float(rng.random())
+        acc = 0.0
+        w = self.weights(cands)
+        for c, wi in zip(cands, w):
+            acc += wi
+            if u < acc:
+                return c
+        return cands[-1]
+
+    def entropy(self, cands: tuple) -> float:
+        """Normalized Shannon entropy of the posterior over ``cands``:
+        1.0 = uniform (nothing learned), -> 0 as the proposal converges on
+        one candidate; 0.0 for singleton sets."""
+        if len(cands) <= 1:
+            return 0.0
+        h = -sum(wi * math.log(wi) for wi in self.weights(cands) if wi > 0)
+        return h / math.log(len(cands))
+
+    # ---- io ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        items = sorted(self.mass.items(), key=lambda kv: str(kv[0]))
+        return {"alpha": self.alpha,
+                "values": [v for v, _ in items],
+                "mass": [m for _, m in items],
+                "count": [self.count.get(v, 0.0) for v, _ in items]}
+
+    @staticmethod
+    def from_json(payload: Mapping) -> "DecisionDistribution":
+        d = DecisionDistribution(alpha=float(payload.get("alpha", 1.0)))
+        counts = payload.get("count", [])
+        for i, (v, m) in enumerate(zip(payload["values"], payload["mass"])):
+            v = _dist_key(v)
+            d.mass[v] = float(m)
+            if i < len(counts) and counts[i]:
+                d.count[v] = float(counts[i])
+        return d
+
+    def __repr__(self):
+        return (f"DecisionDistribution(n={self.n_observations:g}, "
+                f"support={len(self.mass)})")
+
+
+def _dist_key(x):
+    # JSON round-trips tuples as lists; candidate values must hash.
+    if isinstance(x, list):
+        return tuple(_dist_key(v) for v in x)
+    return x
+
+
+# =============================================================================
 # Sampling instructions and the trace interpreter.
 # =============================================================================
 
@@ -161,6 +321,9 @@ class Instruction:
     kind: str  # SAMPLE_CATEGORICAL | SAMPLE_TILE_SPLIT
     candidates: CandidatesFn
     legacy: LegacyFn | None = None  # v1-trace translation hook
+    # the learned proposal: mutable evidence carried by a frozen site
+    dist: DecisionDistribution = dataclasses.field(
+        default_factory=DecisionDistribution, compare=False)
 
 
 def sample_categorical(name: str, candidates, legacy=None) -> Instruction:
@@ -263,7 +426,7 @@ class SpaceProgram:
                 if proposed is not None:
                     choice, prov = _snap(proposed, cands), PROV_LEGACY
             if choice is None:
-                choice = cands[int(rng.integers(len(cands)))]
+                choice = ins.dist.draw(cands, rng)
                 prov = PROV_SAMPLED
             ctx[ins.name] = choice
             decisions.append(Decision(ins.name, choice, cands, prov))
@@ -280,6 +443,63 @@ class SpaceProgram:
         resampled, so the result is always a coherent program trace."""
         d = schedule.as_dict()
         return self.replay(d, rng, legacy=d)
+
+    # ---- learned proposals ---------------------------------------------------
+    def dist(self, name: str) -> DecisionDistribution | None:
+        """The proposal distribution of one decision (None if unknown)."""
+        for ins in self.instructions:
+            if ins.name == name:
+                return ins.dist
+        return None
+
+    def observe(self, schedule: Schedule, reward: float) -> None:
+        """Feed one measured outcome back into the proposals of every
+        decision this trace made (the tuner calls this with a rank-relative
+        reward each time a measurement lands)."""
+        d = schedule.as_dict()
+        for ins in self.instructions:
+            if ins.name in d:
+                ins.dist.observe(d[ins.name], reward)
+
+    def seed_priors(self, priors: Mapping[str, Mapping[Any, float]],
+                    strength: float = 8.0) -> None:
+        """Warm-start the proposals from transferred posteriors
+        (``TuningDatabase.transfer_distributions`` output): each named
+        decision's weights blend in as ``strength`` pseudo-observations."""
+        for ins in self.instructions:
+            w = priors.get(ins.name)
+            if w:
+                ins.dist.seed_prior(w, strength)
+
+    def proposal_entropy(self) -> dict[str, float]:
+        """Normalized posterior entropy per decision, evaluated along the
+        *mode* prefix (each upstream choice fixed to its highest-weight
+        candidate; uniform posteriors fall back to the first candidate, the
+        old default prefix). 1.0 = still uniform, -> 0 = converged."""
+        ctx: dict[str, Any] = {}
+        out: dict[str, float] = {}
+        for ins in self.instructions:
+            cands = tuple(ins.candidates(ctx))
+            out[ins.name] = ins.dist.entropy(cands)
+            w = ins.dist.weights(cands)
+            mode = max(range(len(cands)), key=lambda i: (w[i], -i))
+            ctx[ins.name] = cands[mode]
+        return out
+
+    def dists_to_json(self) -> dict[str, dict]:
+        """Serialize every decision's proposal that carries evidence."""
+        return {ins.name: ins.dist.to_json()
+                for ins in self.instructions if ins.dist.mass}
+
+    def load_dists(self, payload: Mapping[str, Mapping]) -> None:
+        """Restore serialized proposals (inverse of :meth:`dists_to_json`)."""
+        for ins in self.instructions:
+            blob = payload.get(ins.name)
+            if blob:
+                restored = DecisionDistribution.from_json(blob)
+                ins.dist.alpha = restored.alpha
+                ins.dist.mass = restored.mass
+                ins.dist.count = restored.count
 
     # ---- validation ----------------------------------------------------------
     def validate(self, schedule: Schedule) -> KernelParams:
@@ -455,11 +675,32 @@ def space_for(workload: Workload, hw: HardwareConfig) -> SpaceProgram:
                              else (True, False))),
         ]
     elif workload.op == "vmacc":
-        r, _c = workload.dims
+        r, c = workload.dims
+
+        def bc_candidates(ctx):
+            """Column split: any perfect tile of the padded c extent the
+            kernel can actually lower — gated by the kernel's own
+            block-shape capability (``supports_block_shape``), capped at
+            the variant's base columns."""
+            from repro.kernels.vmacc import ops as vmacc_ops  # lazy: no cycle
+
+            base_bc = block(ctx)[1]
+            cands = tuple(
+                cc for cc in tile_candidates(c, lane, base_bc)
+                if vmacc_ops.supports_block_shape(ctx["br"], cc, sub, lane))
+            return cands or (_scaled(base_bc, 1.0, lane, c),)
+
+        def legacy_bc(trace, ctx):
+            """v1 traces never split bc: reproduce the variant-derived value
+            the legacy concretize path computes, bit-identically (it is the
+            1.0 SCALES anchor tile_candidates embeds, so always present)."""
+            return _scaled(block(ctx)[1], 1.0, lane, c)
+
         ins += [
             sample_tile_split(
                 "br", lambda ctx: tile_candidates(r, sub, block(ctx)[0]),
                 legacy=legacy_tile("r_scale", 0, r, sub)),
+            sample_tile_split("bc", bc_candidates, legacy=legacy_bc),
         ]
     elif workload.op == "attention":
         pass  # the variant ladder is the whole space (block_q x block_kv)
@@ -593,7 +834,10 @@ def concretize(workload: Workload, hw: HardwareConfig, schedule: Schedule,
             br = int(schedule["br"])
         else:
             br = _scaled(base[0], schedule.get("r_scale", 1.0), sub, r)
-        bc = _scaled(base[1], 1.0, lane, c)
+        if schedule.get("bc") is not None:  # v2 program trace: bc split
+            bc = int(schedule["bc"])
+        else:  # v1 flat trace: bc is variant-derived, never split
+            bc = _scaled(base[1], 1.0, lane, c)
         pr, pc = round_up(r, br), round_up(c, bc)
         grid = (pr // br, pc // bc)
         vmem = 4 * br * bc * max(ib, ob)

@@ -12,6 +12,19 @@ A search can be *warm-started* from schedules recorded in a previous run
 experiment): they are measured first and seed both the cost model and the
 evolutionary population.
 
+Two models learn from every measurement. The cost model ranks candidates
+before they are measured; the design-space program's **proposal
+distributions** shape where candidates come from: ``_record`` feeds each
+measured outcome back into the distributions of the decisions its trace
+made (:meth:`SpaceProgram.observe`), with a *rank-relative* reward — the
+fraction of previously measured latencies this one beats — so analytic and
+real-board runners train the proposals identically and no latency scale
+leaks in. ``learn_proposals=False`` restores the pure-uniform sampler;
+``prior_distributions`` seeds the program from transferred posteriors
+(``TuningDatabase.transfer_distributions``); ``pretrain_cost_model`` folds
+a warm database's records into the cost model before the first generation.
+The learned posteriors persist to the database from ``finish()``.
+
 Measure/search scheduling
 -------------------------
 On real hardware, measurement — not search — dominates tuning wall-time
@@ -51,14 +64,16 @@ records real measuring/waiting intervals, not summed totals.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import time
 from collections import deque
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 from repro.core import space as space_lib
-from repro.core.cost_model import RidgeCostModel, features
+from repro.core.cost_model import (RidgeCostModel, features,
+                                   pretrain_from_database)
 from repro.core.database import TuningDatabase
 from repro.core.evolution import EvolutionarySearch
 from repro.core.hardware import HardwareConfig
@@ -86,6 +101,21 @@ class TuneResult:
     # farm (see board_farm.BoardFarm.farm_summary); None for single-target
     # runners
     board_stats: dict | None = None
+    # normalized posterior entropy per decision at the end of the search
+    # (1.0 = still uniform, -> 0 = proposal converged); {} when proposal
+    # learning was disabled
+    proposal_entropy: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def mean_proposal_entropy(self) -> float:
+        """Mean normalized proposal entropy across this search's decisions
+        (NaN when learning was off) — the per-session convergence trend the
+        benchmark report tracks."""
+        if not self.proposal_entropy:
+            return float("nan")
+        vals = list(self.proposal_entropy.values())
+        return sum(vals) / len(vals)
 
     @property
     def overlap_fraction(self) -> float:
@@ -136,7 +166,10 @@ class TuneDriver:
                  database: TuningDatabase | None = None,
                  warmup_fraction: float = 0.25, batch: int = 4,
                  warm_start: Sequence[Schedule] = (),
-                 log: Callable[[str], None] | None = None):
+                 log: Callable[[str], None] | None = None,
+                 learn_proposals: bool = True,
+                 prior_distributions: Mapping[str, Mapping] | None = None,
+                 pretrain_cost_model: bool = False):
         self.workload, self.hw, self.runner = workload, hw, runner
         self.trials = trials
         self.batch = batch
@@ -153,8 +186,19 @@ class TuneDriver:
         # the generative design-space program (variant-conditioned tile
         # splits, postprocessor pipeline) this search samples and replays
         self.space = space_lib.space_for(workload, hw)
+        self.learn_proposals = learn_proposals
+        if learn_proposals and prior_distributions:
+            # transferred posteriors warm-start the proposals (Fig. 4 on
+            # distributions); with learning off, priors would silently bias
+            # a sampler the caller asked to be uniform, so they're ignored
+            self.space.seed_priors(prior_distributions)
+        # sorted finite latencies measured so far — the reference population
+        # for the rank-relative proposal reward
+        self._lat_sorted: list[float] = []
         self.sampler = TraceSampler(seed)
         self.cost_model = RidgeCostModel()
+        if pretrain_cost_model and database is not None:
+            pretrain_from_database(self.cost_model, database, hw)
         self.search = EvolutionarySearch(workload, hw, self.space,
                                          self.sampler)
         self.measured: dict[tuple, float] = {}
@@ -280,6 +324,17 @@ class TuneDriver:
         if params.valid and math.isfinite(latency):
             self.cost_model.update(features(self.workload, self.hw, params),
                                    latency)
+            if self.learn_proposals:
+                # rank-relative reward: the fraction of previously measured
+                # latencies this one beats (midpoint-corrected so the first
+                # measurement is neutral at 0.5) — scale-free, so analytic
+                # and real-board runners train the proposals identically,
+                # and deterministic given reconcile order
+                worse = len(self._lat_sorted) - bisect.bisect_right(
+                    self._lat_sorted, latency)
+                reward = (worse + 0.5) / (len(self._lat_sorted) + 1)
+                self.space.observe(s, reward)
+                bisect.insort(self._lat_sorted, latency)
             if self.database is not None:
                 self.database.add(self.workload, self.hw.name, s, latency,
                                   self.runner.name)
@@ -309,12 +364,19 @@ class TuneDriver:
             overlap = self.overlap_span_s  # span-accurate (scheduler)
         else:
             overlap = max(0.0, self.measure_time_s - self.wait_time_s)
+        entropy: dict[str, float] = {}
+        if self.learn_proposals:
+            entropy = self.space.proposal_entropy()
+            if self.database is not None:
+                self.database.set_distributions(
+                    self.workload, self.hw.name, self.space.dists_to_json())
         return TuneResult(
             self.workload, self.hw, self.best_schedule, self.best_latency,
             self.history, len(self.history), wall,
             warm_started=self.warm_started, pipeline_depth=pipeline_depth,
             measure_time_s=self.measure_time_s, overlap_s=overlap,
-            board_stats=summary() if callable(summary) else None)
+            board_stats=summary() if callable(summary) else None,
+            proposal_entropy=entropy)
 
 
 def timed_run_batch(runner: Runner, driver: TuneDriver,
@@ -397,13 +459,21 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
          batch: int = 4,
          warm_start: Sequence[Schedule] = (),
          log: Callable[[str], None] | None = None,
-         pipeline_depth: int = 1) -> TuneResult:
+         pipeline_depth: int = 1,
+         learn_proposals: bool = True,
+         prior_distributions: Mapping[str, Mapping] | None = None,
+         pretrain_cost_model: bool = False) -> TuneResult:
     """Tune one workload. ``pipeline_depth`` bounds how many proposed batches
     may be in flight at once (1 = fully synchronous; see module docstring for
-    the determinism guarantees of the pipelined mode)."""
+    the determinism guarantees of the pipelined mode); the ``learn_*`` /
+    ``prior_distributions`` / ``pretrain_cost_model`` knobs are documented on
+    :class:`TuneDriver`."""
     driver = TuneDriver(workload, hw, runner, trials=trials, seed=seed,
                         database=database, warmup_fraction=warmup_fraction,
-                        batch=batch, warm_start=warm_start, log=log)
+                        batch=batch, warm_start=warm_start, log=log,
+                        learn_proposals=learn_proposals,
+                        prior_distributions=prior_distributions,
+                        pretrain_cost_model=pretrain_cost_model)
     depth = effective_pipeline_depth(runner, pipeline_depth)
     if pipeline_depth <= 1:
         while (batch_s := driver.propose()) is not None:

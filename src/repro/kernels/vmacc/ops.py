@@ -1,4 +1,4 @@
-"""Jitted wrapper for the vmacc kernel."""
+"""Jitted wrapper for the vmacc kernel, plus its block-shape capability."""
 
 from __future__ import annotations
 
@@ -7,6 +7,21 @@ import jax.numpy as jnp
 
 from repro.core.space import KernelParams
 from repro.kernels.vmacc.kernel import vmacc_pallas
+
+
+def supports_block_shape(br: int, bc: int, sub: int, lane: int) -> bool:
+    """Kernel-side generality check for a (br, bc) block.
+
+    The Pallas kernel tiles all three operands and the output as
+    ``(br, bc)`` blocks over a 2-D grid covering the padded extents exactly,
+    so it lowers for any positive block whose rows respect the sublane grain
+    and whose columns respect the lane grain. Anything ragged would leave a
+    partially masked store the kernel does not implement — the design-space
+    program consults this before offering a ``bc`` split candidate.
+    """
+    if br < 1 or bc < 1:
+        return False
+    return br % sub == 0 and bc % lane == 0
 
 
 def build(params: KernelParams, interpret: bool = True):

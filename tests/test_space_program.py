@@ -486,3 +486,83 @@ def test_session_report_tracks_per_model_trends(tmp_path):
     # second identical-model session warm-starts from the first: never worse
     trend = next(r for r in rows if r[0] == "report/bert-tiny/trend")
     assert "best_vs_first" in trend[2]
+
+
+# --------------------------------------------- vmacc bc split (learned-era) ----
+
+def test_vmacc_bc_split_is_kernel_gated_and_variant_conditioned():
+    """The bc (column) axis is a real split: several candidates for wide c,
+    every one accepted by the kernel's own block-shape capability check."""
+    from repro.kernels.vmacc.ops import supports_block_shape
+
+    wl = W.vmacc(2048, 8192)
+    prog = space_for(wl, V5E)
+    assert prog.names() == ["variant", "br", "bc"]
+    lane = V5E.lane_align(wl.dtype)
+    sub = V5E.sublane_align(wl.dtype)
+    for variant in prog["variant"]:
+        ctx = {"variant": variant}
+        ctx["br"] = prog.candidates("br", ctx)[0]
+        cands = prog.candidates("bc", ctx)
+        if variant == "vl_min":
+            # the fallback variant keeps its single minimal-column form
+            assert cands == (lane,)
+            continue
+        assert len(cands) >= 2  # genuinely widened vs the variant-derived bc
+        for cc in cands:
+            assert supports_block_shape(ctx["br"], cc, sub, lane)
+            assert cc % lane == 0
+
+
+def test_vmacc_bc_split_concretizes_perfect_tiles():
+    """Pinned bc values flow through concretize: the padded c extent is a
+    perfect multiple of the chosen block on both axes."""
+    wl = W.vmacc(2048, 8192)
+    prog = space_for(wl, V5E)
+    smp = TraceSampler(0)
+    seen_bc = set()
+    for _ in range(64):
+        s = smp.sample(prog)
+        p = concretize(wl, V5E, s)
+        seen_bc.add(p.block[1])
+        assert p.block[1] == s["bc"]
+        assert p.padded_dims[0] % p.block[0] == 0
+        assert p.padded_dims[1] % p.block[1] == 0
+    assert len(seen_bc) >= 2  # sampling actually explores the new axis
+
+
+def test_vmacc_v1_trace_still_concretizes_variant_derived_bc():
+    """v1 flat traces have no bc decision: the legacy path must keep
+    producing the variant-derived bc, and adopt must translate them onto
+    the program with identical concrete params — consuming no extra rng."""
+    from repro.core import fixed_library_schedule
+
+    for wl in (W.vmacc(256, 1024), W.vmacc(2048, 2048),
+               W.vmacc(96, 200), W.vmacc(1, 64)):
+        prog = space_for(wl, V5E)
+        fx = fixed_library_schedule(wl, V5E)
+        adopted = prog.adopt(fx, TraceSampler(0).rng)
+        assert adopted.get("bc") is not None  # the program trace carries it
+        assert concretize(wl, V5E, adopted) == concretize(wl, V5E, fx)
+
+
+# ------------------------------------- learned proposals: uniform fallback ----
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       case=st.sampled_from(["matmul", "gemv", "vmacc"]))
+def test_no_evidence_sampling_bit_identical_to_uniform(seed, case):
+    """A fresh program (no measurements observed) must draw through exactly
+    the legacy uniform rng stream: same rng.integers consumption per
+    decision, so pre-learning seeds reproduce bit-identically."""
+    wl = {"matmul": W.matmul(512, 2048, 2048, "bfloat16"),
+          "gemv": W.gemv(2048, 8192, "bfloat16"),
+          "vmacc": W.vmacc(2048, 2048)}[case]
+    prog = space_for(wl, V5E)
+    sampled = prog.sample(np.random.default_rng(seed)).as_dict()
+    rng = np.random.default_rng(seed)  # replicate the legacy uniform loop
+    ctx = {}
+    for name in prog.names():
+        cands = prog.candidates(name, ctx)
+        ctx[name] = cands[int(rng.integers(len(cands)))]
+    assert sampled == ctx
