@@ -260,6 +260,68 @@ def space_cardinality() -> None:
                 f"split should offer multiple kernel-supported tiles")
 
 
+def static_suite() -> None:
+    """Static feasibility analysis vs exhaustive dynamic enumeration.
+
+    For every registered kernel family x hardware config: run the static
+    analyzer, exhaustively enumerate the same program's traces through the
+    dynamic postprocessor pipeline (the ground truth), and assert the
+    verdicts agree *exactly* — same trace counts, same per-decision
+    feasible sets. Reports the fraction of the raw space proven infeasible
+    (what the tuner never has to sample and a board never has to measure)
+    and runs the sweep-level space lint as a hard gate: the registered
+    space definitions must be provably clean (no empty feasible sets, no
+    name collisions, no capability-ignoring splits)."""
+    from repro.core import lint_space
+    from repro.core import static_analysis as static_lib
+    from repro.core.schedule import Schedule
+
+    configs = (V5E, V5E_VMEM32, V5E_VMEM64, V5E_MXU256)
+    cases = [
+        ("matmul", W.matmul(512, 512, 512, "bfloat16")),
+        ("qmatmul", W.qmatmul(512, 512, 512)),
+        ("gemv", W.gemv(1024, 4096, "bfloat16")),
+        ("vmacc", W.vmacc(2048, 2048)),
+        ("attention", W.attention(1, 8, 8, 512, 512, 128)),
+    ]
+    for name, wl in cases:
+        for hw in configs:
+            report = static_lib.analyze(wl, hw)
+            assert report.exhaustive, f"{name}@{hw.name}: space too large"
+            # ground truth: every trace through the dynamic pipeline
+            prog = space_for(wl, hw)
+            total = valid = 0
+            feasible = {ins.name: set() for ins in prog.instructions}
+            for t in prog.traces(limit=static_lib.DEFAULT_TRACE_LIMIT):
+                total += 1
+                if prog.validate(Schedule.fixed(**t)).valid:
+                    valid += 1
+                    for k, v in t.items():
+                        feasible[k].add(v)
+            assert (report.total_traces, report.valid_traces) == \
+                (total, valid), (
+                f"{name}@{hw.name}: analyzer counted "
+                f"{report.total_traces}/{report.valid_traces} traces, "
+                f"dynamic enumeration {total}/{valid}")
+            for k, vals in feasible.items():
+                assert set(report.feasible[k]) == vals, (
+                    f"{name}@{hw.name}: feasible set of {k!r} diverged: "
+                    f"static {sorted(report.feasible[k], key=repr)} vs "
+                    f"dynamic {sorted(vals, key=repr)}")
+            emit(f"static/{name}/{hw.name}/infeasible_fraction",
+                 report.infeasible_fraction,
+                 f"traces={report.total_traces} "
+                 f"valid={report.valid_traces} "
+                 f"dead_values={report.pruned_value_count}")
+        diags = lint_space(wl, configs)
+        hard = [d for d in diags if d.rule != static_lib.RULE_DEAD]
+        assert not hard, (
+            f"{name}: space definition lint failed: "
+            f"{[str(d) for d in hard]}")
+        emit(f"static/{name}/lint", 0.0,
+             f"diagnostics={len(diags)} hard=0")
+
+
 # ------------------------------------------------------------- board farm ----
 
 def _candidate_population(wl, hw, limit=16):
@@ -623,6 +685,7 @@ def tuning_cost() -> None:
 
 SUITES = {
     "space": space_cardinality,
+    "static": static_suite,
     "matmul": matmul_suite,
     "hw_sweep": hw_sweep,
     "trace": trace_analysis,
@@ -633,7 +696,7 @@ SUITES = {
     "learn": learn_suite,
 }
 
-_NO_TRIALS_ARG = ("tuning_cost", "space")
+_NO_TRIALS_ARG = ("tuning_cost", "space", "static")
 
 
 def main() -> None:

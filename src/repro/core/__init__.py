@@ -14,6 +14,8 @@ from repro.core.space import (space_for, concretize, DecisionDistribution,
                               KernelParams, SpaceProgram, flat_space_v1,
                               tile_candidates, v1_distinct_configs)
 from repro.core.sampler import TraceSampler
+from repro.core.static_analysis import (Diagnostic, SpaceReport, analyze,
+                                        lint_space, pruned_program)
 from repro.core.cost_model import (RidgeCostModel, features,
                                    pretrain_from_database)
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
@@ -38,6 +40,7 @@ __all__ = [
     "attention", "Schedule", "Decision", "space_for", "concretize",
     "DecisionDistribution", "KernelParams", "SpaceProgram", "flat_space_v1",
     "tile_candidates", "v1_distinct_configs", "TraceSampler",
+    "Diagnostic", "SpaceReport", "analyze", "lint_space", "pruned_program",
     "RidgeCostModel", "features", "pretrain_from_database",
     "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
     "MeasureScheduler", "MeasureTicket", "SerialMeasureQueue",

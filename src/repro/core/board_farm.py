@@ -58,6 +58,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Sequence
 
+from repro.core import static_analysis as static_lib
 from repro.core.hardware import HardwareConfig
 from repro.core.measure_scheduler import MeasureTicket
 from repro.core.runner import INVALID
@@ -95,6 +96,12 @@ class Board:
     farm's straggler deadline for this board alone (a slow-but-honest FPGA
     vs a fast simulator).
     """
+
+    # Whether schedules dispatched here run through real space
+    # concretization. Boards that measure via a custom task (which may
+    # ignore the schedule entirely) set this False so the farm's static
+    # screen never refuses their possibly-synthetic schedules.
+    static_screenable = True
 
     def __init__(self, name: str, hw: HardwareConfig, capacity: int = 1,
                  timeout_s: float | None = None):
@@ -261,6 +268,9 @@ class LocalBoard(Board):
         self.mp_context = mp_context
         self._task = task if task is not None else mp_lib._measure_candidate
         self._default_task = mp_lib._measure_candidate
+        # a custom task never concretizes the schedule, so the static
+        # screen has no say over what it can or cannot measure
+        self.static_screenable = task is None
         self._pool: Any = None
 
     def _ensure_pool(self):
@@ -381,6 +391,9 @@ class BoardFarm:
     """
 
     overlap_capable = True
+    # the farm refuses statically-invalid work itself (no scheduler-side
+    # screening needed — rejections are counted exactly once, here)
+    static_screens = True
     # idle dispatcher threads exit after this grace (a fresh submit
     # respawns one), so an unclosed farm never parks a thread forever
     _IDLE_EXIT_S = 0.5
@@ -405,6 +418,7 @@ class BoardFarm:
         self.requeues = 0  # candidate requeue events
         self.retry_exhausted = 0  # candidates INVALID after max_retries
         self.garbage_sanitized = 0  # non-physical latencies mapped to INVALID
+        self.static_rejected = 0  # candidates refused before dispatch
         self._wall_s = 0.0  # accumulated active span (work in the system)
         self._span_t0: float | None = None  # start of the current active span
         self._tokens = itertools.count()
@@ -435,12 +449,42 @@ class BoardFarm:
         return self.submit_batch(workload, schedules).result()
 
     # ---- async submission protocol ---------------------------------------------
+    def _screen(self, workload: Workload,
+                schedules: Sequence[Schedule]) -> set[int]:
+        """Indices of schedules the static analyzer proves can never
+        validate on this farm's hardware — refused before dispatch so a
+        board slot is never burned measuring a provably-INVALID candidate
+        (their ticket slots settle to ``INVALID`` immediately)."""
+        if not all(getattr(b, "static_screenable", True)
+                   for b in self.boards):
+            return set()
+        report = static_lib.feasibility(workload, self.hw)
+        if report is None or not report.exhaustive:
+            return set()
+        rejected: set[int] = set()
+        for i, s in enumerate(schedules):
+            try:
+                if report.check_schedule(s):
+                    rejected.add(i)
+            except Exception:
+                pass  # unscreenable: let the board (and _sanitize) decide
+        return rejected
+
     def submit_batch(self, workload: Workload,
                      schedules: Sequence[Schedule]) -> _FarmTicket:
         ticket = _FarmTicket(workload, schedules)
         if not ticket.schedules:
             ticket._complete([])
             return ticket
+        # Settle the statically-refused slots before any work item exists:
+        # no dispatcher thread can be racing _settle on this ticket yet.
+        rejected = self._screen(workload, ticket.schedules)
+        if rejected:
+            self.static_rejected += len(rejected)
+            for idx in sorted(rejected):
+                ticket._settle(idx, INVALID)
+            if ticket.done():  # everything refused: never touches the farm
+                return ticket
         with self._mu:
             if self._closed:
                 ticket._fail(RuntimeError(f"farm {self.name} is closed"))
@@ -450,7 +494,8 @@ class BoardFarm:
                 self._span_t0 = time.monotonic()
             self._work.extend(
                 _WorkItem(ticket, i, workload, s)
-                for i, s in enumerate(ticket.schedules))
+                for i, s in enumerate(ticket.schedules)
+                if i not in rejected)
             self._ensure_dispatcher()
         self._done.put(_WAKE)
         return ticket
@@ -661,6 +706,7 @@ class BoardFarm:
             "requeues": self.requeues,
             "invalid_after_retries": self.retry_exhausted,
             "garbage_sanitized": self.garbage_sanitized,
+            "static_rejected": self.static_rejected,
             "measure_wall_s": wall,
         }
 

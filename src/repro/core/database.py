@@ -20,6 +20,14 @@ optional ``"dist"`` payload block — v2 databases without it stay loadable).
 records, closest shape first, into ``{decision: {value: weight}}`` priors a
 new search seeds its program with (Fig. 4 transfer upgraded from warm-start
 traces to warm-start distributions).
+
+Incoming data is **statically screened** (``core/static_analysis.py``):
+``load`` verifies every record against the feasible table of its own
+(workload, hardware) space and quarantines stale ones — values no longer in
+any postprocessor-valid completion — instead of crashing or silently
+warm-starting searches from garbage (see :attr:`TuningDatabase.quarantined`);
+``transfer_candidates`` / ``transfer_distributions`` apply the same screen at
+query time so post-load additions are covered too.
 """
 
 from __future__ import annotations
@@ -30,6 +38,8 @@ import os
 import tempfile
 from typing import Any
 
+from repro.core import hardware as hw_lib
+from repro.core import static_analysis as static_lib
 from repro.core.schedule import Schedule
 from repro.core.space import DecisionDistribution
 from repro.core.workload import Workload
@@ -46,6 +56,13 @@ class TuningDatabase:
         # key -> {decision_name: serialized DecisionDistribution} — the
         # learned proposal posteriors of the last search on that key
         self.distributions: dict[str, dict[str, dict]] = {}
+        # key -> [{"record": ..., "reason": ...}] — loaded records the
+        # static analyzer proved can no longer complete into a valid
+        # schedule of their own (workload, hardware) space (stale space
+        # version, foreign variant, hand-edited file). Kept out of best()/
+        # transfer/warm-start but preserved across save() for forensics.
+        self.quarantined: dict[str, list[dict]] = {}
+        self.stale_quarantined = 0  # records quarantined by load()
         # memoized best() lookups (serving-path dispatch cache): key ->
         # (Schedule, latency) | None, invalidated per-key by add() and
         # wholesale by load(). Schedules are immutable, so sharing the
@@ -155,6 +172,21 @@ class TuningDatabase:
             finite = [r for r in recs
                       if r["latency_s"] == r["latency_s"]
                       and r["latency_s"] != float("inf")]
+            # static screen against the source key's own space: a record
+            # added after load() (or never loaded) could still be stale,
+            # and a stale trace must not warm-start the new search
+            report = self._static_report_for_key(key)
+            if report is not None and finite:
+                screened = []
+                for r in finite:
+                    try:
+                        ok = not report.check_schedule(
+                            Schedule.from_json(r["schedule"]))
+                    except Exception:
+                        ok = False
+                    if ok:
+                        screened.append(r)
+                finite = screened
             if not finite:
                 continue
             if key == exact_key:
@@ -205,8 +237,12 @@ class TuningDatabase:
             scored.append((distance, key, dists))
         scored.sort(key=lambda t: t[:2])
         out: dict[str, dict[Any, float]] = {}
-        for distance, _key, dists in scored[:limit]:
+        for distance, key, dists in scored[:limit]:
             source_w = 1.0 / (1.0 + max(distance, 0.0))
+            # statically-dead values of the source's own space carry no
+            # transferable evidence (a stale posterior would bias the new
+            # search toward candidates that can never validate)
+            report = self._static_report_for_key(key)
             for name, blob in dists.items():
                 d = DecisionDistribution.from_json(blob)
                 values = tuple(sorted(d.mass, key=str))
@@ -216,6 +252,8 @@ class TuningDatabase:
                 # rewards), not raw mass — frequency must not leak in
                 tgt = out.setdefault(name, {})
                 for v, score in zip(values, d.weights(values)):
+                    if report is not None and not report.is_feasible(name, v):
+                        continue
                     tgt[v] = tgt.get(v, 0.0) + source_w * score
         return out
 
@@ -228,7 +266,8 @@ class TuningDatabase:
         if path is None:
             raise ValueError("no path configured")
         payload = {"records": self.records, "workloads": self.workloads,
-                   "sessions": self.sessions, "dist": self.distributions}
+                   "sessions": self.sessions, "dist": self.distributions,
+                   "quarantine": self.quarantined}
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
         try:
@@ -251,7 +290,57 @@ class TuningDatabase:
         self.workloads = payload.get("workloads", {})
         self.sessions = payload.get("sessions", [])
         self.distributions = payload.get("dist", {})  # optional: v2 payloads
+        self.quarantined = payload.get("quarantine", {})
         self._best_cache.clear()
+        self._verify_records()
+
+    # ---- static screening ----------------------------------------------------
+    def _static_report_for_key(self, key: str):
+        """Feasibility report for a record key's *own* (workload, hardware)
+        space, or None when one can't be built (unknown hardware name,
+        unregistered op, malformed workload JSON) — verification is then
+        skipped rather than guessed, so cross-hardware transfer records and
+        foreign-family databases keep loading untouched."""
+        wl_json = self.workloads.get(key)
+        if wl_json is None or "@" not in key:
+            return None
+        try:
+            wl = Workload.from_json(wl_json)
+            hw = hw_lib.get(key.rsplit("@", 1)[1])
+        except Exception:
+            return None
+        return static_lib.feasibility(wl, hw)
+
+    def _verify_records(self) -> None:
+        """Quarantine loaded records the static analyzer proves stale.
+
+        Each record is checked against the feasible table of its own key's
+        space — a schedule whose decision values can no longer participate
+        in any postprocessor-valid completion (the space definition moved,
+        the variant was renamed, the file was hand-edited) would otherwise
+        crash replay or silently warm-start searches from garbage. Such
+        records move to :attr:`quarantined` with the provable reason;
+        everything the analyzer can't decide stays in place."""
+        for key in list(self.records):
+            report = self._static_report_for_key(key)
+            kept: list[dict] = []
+            bad: list[dict] = []
+            for rec in self.records[key]:
+                try:
+                    schedule = Schedule.from_json(rec["schedule"])
+                    reason = (report.check_schedule(schedule)
+                              if report is not None else "")
+                except Exception as exc:
+                    reason = f"malformed record: {exc}"
+                if reason:
+                    bad.append({"record": rec, "reason": reason})
+                else:
+                    kept.append(rec)
+            if bad:
+                self.records[key] = kept
+                self.quarantined.setdefault(key, []).extend(bad)
+                self.stale_quarantined += len(bad)
+                self._best_cache.pop(key, None)
 
 
 def _json_sanitize(x: Any) -> Any:

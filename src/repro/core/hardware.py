@@ -31,6 +31,13 @@ class HardwareConfig:
     vmem_capacity: int  # bytes  (bounds the block working set, like VLEN)
     # Interconnect (per-link, one direction).
     ici_bandwidth: float  # bytes/s
+    # Fraction of VMEM a kernel's block working set may occupy. The rest is
+    # headroom for compiler-managed spills, semaphores, and double-buffering
+    # slack the footprint model doesn't count. This is the one authoritative
+    # bound shared by the dynamic postprocessor (``postproc_vmem_fit``) and
+    # the static feasibility analyzer (``core/static_analysis.py``) — tuning
+    # it per part (or per compiler release) must move both in lockstep.
+    vmem_headroom: float = 0.9
     # Compute unit geometry.
     mxu_dim: int = 128  # systolic array is mxu_dim x mxu_dim
     vpu_lanes: int = 128
@@ -39,6 +46,12 @@ class HardwareConfig:
     # (instruction issue + DMA setup); exposes the paper's "too-small VL is
     # not worth vectorizing" effect (they stop at VL=4, we stop at one tile).
     grid_step_overhead_s: float = 1.5e-6
+
+    @property
+    def vmem_budget(self) -> float:
+        """Usable VMEM bytes for a block working set (capacity x headroom) —
+        the single bound both validation paths compare footprints against."""
+        return self.vmem_capacity * self.vmem_headroom
 
     def peak_flops(self, dtype: str) -> float:
         if dtype in ("int8", "uint8"):

@@ -29,6 +29,13 @@ gap with three pieces:
 ``tuner.run_scheduled`` (and through it ``tune`` and
 ``TuningSession``) is built on this scheduler; ``BoardFarm`` implements the
 protocol natively with a persistent cross-batch work-stealing dispatcher.
+
+Statically-invalid work is refused before it reaches a backend: schedules
+the feasibility analyzer (``core/static_analysis.py``) proves can never
+validate come back ``INVALID`` from a screened ticket without occupying the
+measurement thread or a board (``static_rejected`` counts them). Backends
+that screen natively (``BoardFarm.static_screens``) are left to do it
+themselves so rejections are counted exactly once.
 """
 
 from __future__ import annotations
@@ -39,8 +46,13 @@ import time
 from collections import deque
 from typing import Any, Sequence
 
+from repro.core import static_analysis as static_lib
 from repro.core.schedule import Schedule
 from repro.core.workload import Workload
+
+# local copy of runner.INVALID (the runner module is imported lazily here —
+# see SerialMeasureQueue._loop — to keep this module import-light)
+_INVALID = float("inf")
 
 
 class MeasureTicket:
@@ -118,6 +130,54 @@ class MeasureTicket:
         return (self.t_start, self.t_end)
 
 
+class _ScreenedTicket(MeasureTicket):
+    """Ticket for a statically screened batch: the backend only measured
+    the kept subset, and ``result()`` re-inserts ``INVALID`` at the
+    rejected positions so the latency list stays aligned with the batch the
+    caller submitted (consumers index ``result()`` by submission position).
+    With nothing kept there is no inner ticket at all — the batch completes
+    immediately without touching the backend."""
+
+    def __init__(self, workload, schedules, inner: MeasureTicket | None,
+                 keep: Sequence[int]):
+        super().__init__(workload, schedules)
+        self._inner = inner
+        self._keep = list(keep)
+        if inner is None:
+            self._complete([_INVALID] * len(self.schedules))
+
+    def subscribe(self, event: threading.Event) -> None:
+        if self._inner is None:
+            super().subscribe(event)
+        else:
+            self._inner.subscribe(event)
+
+    def done(self) -> bool:
+        if self._inner is None:
+            return super().done()
+        return self._inner.done()
+
+    def result(self, timeout: float | None = None) -> list[float]:
+        if self._inner is None:
+            return super().result(timeout)
+        kept = self._inner.result(timeout)
+        merged = [_INVALID] * len(self.schedules)
+        for idx, lat in zip(self._keep, kept):
+            merged[idx] = lat
+        return merged
+
+    @property
+    def measure_s(self) -> float:
+        if self._inner is None:
+            return 0.0  # nothing was measured; charge no backend time
+        return self._inner.measure_s
+
+    def interval(self) -> tuple[float, float] | None:
+        if self._inner is None:
+            return None
+        return self._inner.interval()
+
+
 class SerialMeasureQueue:
     """Default async adapter: one FIFO measurement thread over a synchronous
     runner — exactly the single-queue pipeline ``run_pipelined`` used to
@@ -132,6 +192,12 @@ class SerialMeasureQueue:
         self._q: queue.SimpleQueue = queue.SimpleQueue()
         self._thread: threading.Thread | None = None
         self._closed = False
+
+    @property
+    def hw(self):
+        """The wrapped runner's hardware config (None when it has none) —
+        what the scheduler screens statically-invalid work against."""
+        return getattr(self.runner, "hw", None)
 
     def _ensure_thread(self) -> None:
         if self._thread is None or not self._thread.is_alive():
@@ -240,13 +306,49 @@ class MeasureScheduler:
         self._any_done = threading.Event()  # set whenever any ticket lands
         self._measure_ivs: dict[Any, list[tuple[float, float]]] = {}
         self._wait_ivs: list[tuple[float, float]] = []
+        # schedules refused before reaching the backend because the static
+        # analyzer proved them infeasible (their slots return INVALID
+        # without burning measurement time); see _screen
+        self.static_rejected = 0
 
     # ---- submission ------------------------------------------------------------
+    def _screen(self, workload: Workload,
+                schedules: Sequence[Schedule]) -> list[bool] | None:
+        """Per-schedule statically-provably-invalid verdicts, or None when
+        screening doesn't apply (the backend screens natively, carries no
+        hardware config, or nothing would be rejected)."""
+        if getattr(self._backend, "static_screens", False):
+            return None  # e.g. BoardFarm refuses invalid work itself
+        hw = getattr(self._backend, "hw", None)
+        if hw is None:
+            return None
+        report = static_lib.feasibility(workload, hw)
+        if report is None or not report.exhaustive:
+            return None
+        try:
+            verdicts = [bool(report.check_schedule(s)) for s in schedules]
+        except Exception:
+            return None  # unscreenable schedules: let the backend decide
+        return verdicts if any(verdicts) else None
+
     def submit(self, key: Any, workload: Workload,
                schedules: Sequence[Schedule]) -> MeasureTicket:
-        ticket = self._backend.submit_batch(workload, list(schedules))
+        schedules = list(schedules)
+        verdicts = self._screen(workload, schedules)
+        if verdicts is None:
+            ticket = self._backend.submit_batch(workload, list(schedules))
+        else:
+            # ship only the statically-defensible subset; the rejected
+            # slots come back INVALID without occupying the backend at all
+            keep = [i for i, bad in enumerate(verdicts) if not bad]
+            self.static_rejected += len(schedules) - len(keep)
+            inner = None
+            if keep:
+                inner = self._backend.submit_batch(
+                    workload, [schedules[i] for i in keep])
+            ticket = _ScreenedTicket(workload, schedules, inner, keep)
         ticket.subscribe(self._any_done)
-        self._fifo.append(_Entry(key, list(schedules), ticket))
+        self._fifo.append(_Entry(key, schedules, ticket))
         return ticket
 
     def inflight(self, key: Any = None) -> int:

@@ -253,6 +253,10 @@ class TuningSession:
     multi_queue: bool | None = None
     learn_proposals: bool = True
     pretrain_cost_model: bool = False
+    # consult the static feasibility analyzer so provably-invalid
+    # candidates are never proposed (see core/static_analysis.py); False
+    # restores the purely-dynamic pre-analyzer sampler
+    static_analysis: bool = True
     log: Callable[[str], None] | None = None
 
     def _log(self, msg: str) -> None:
@@ -324,7 +328,8 @@ class TuningSession:
                 pipeline_depth=self.pipeline_depth,
                 learn_proposals=self.learn_proposals,
                 prior_distributions=self._priors_for(wl),
-                pretrain_cost_model=self.pretrain_cost_model))
+                pretrain_cost_model=self.pretrain_cost_model,
+                static_analysis=self.static_analysis))
         return (results, sum(r.overlap_s for r in results),
                 sum(r.measure_time_s for r in results))
 
@@ -345,7 +350,8 @@ class TuningSession:
                              batch=self.batch, warm_start=self._seeds_for(wl),
                              learn_proposals=self.learn_proposals,
                              prior_distributions=self._priors_for(wl),
-                             pretrain_cost_model=self.pretrain_cost_model)
+                             pretrain_cost_model=self.pretrain_cost_model,
+                             static_analysis=self.static_analysis)
             for i, ((count, wl), trials) in enumerate(zip(unique, budgets))]
         tuner.run_scheduled(drivers, self.runner, depth, scheduler=scheduler)
         results = [d.finish(pipeline_depth=depth) for d in drivers]

@@ -44,11 +44,24 @@ records, :meth:`Schedule.fixed` library schedules) are *adopted* onto a
 program the same way — their scale decisions translate to the nearest tile
 anchor — preserving the Fig. 4 warm-start transfer path.
 
-``concretize`` replays either trace layout into :class:`KernelParams` — the
-static parameters a Pallas kernel is built from — and validates it through a
-composable postprocessor pipeline (block alignment, non-empty grid, VMEM
-fit), marking invalid candidates exactly as MetaSchedule's postprocessors
-reject illegal traces.
+Validation is split into a **static** and a **dynamic** half sharing one
+set of rules. The static half (:mod:`repro.core.static_analysis`) abstract-
+interprets the program once per (workload, hardware) — categorical variants
+enumerated exactly, tile splits tracked through the divisor/interval domain
+``tile_candidates`` spans — and proves, before any sampling, which decision
+values can participate in at least one legal completion; the tuner,
+database, and measurement farm consult those feasible sets so provably-dead
+candidates are never proposed, warm-started from, or shipped to a board.
+The dynamic half is the residual per-candidate check: ``concretize``
+replays either trace layout into :class:`KernelParams` — the static
+parameters a Pallas kernel is built from — and runs the composable
+postprocessor pipeline (block alignment, non-empty grid, VMEM fit against
+``HardwareConfig.vmem_headroom``), marking invalid candidates exactly as
+MetaSchedule's postprocessors reject illegal traces. The postprocessors are
+the ground truth: the analyzer's verdicts are required to agree with
+exhaustive postprocessor enumeration (asserted in ``--suite static`` and
+the property tests), so static pruning can only remove candidates the
+dynamic pipeline would have rejected anyway.
 """
 
 from __future__ import annotations
@@ -137,9 +150,12 @@ def postproc_nonempty_grid(workload: Workload, hw: HardwareConfig,
 
 def postproc_vmem_fit(workload: Workload, hw: HardwareConfig,
                       params: KernelParams) -> str:
-    if params.vmem_bytes > hw.vmem_capacity * 0.9:
-        return (f"vmem footprint {params.vmem_bytes} exceeds 90% of "
-                f"{hw.vmem_capacity}")
+    # The headroom-derated capacity lives on the hardware config
+    # (``HardwareConfig.vmem_headroom``) so this dynamic check and the
+    # static analyzer's interval-domain bound can never drift apart.
+    if params.vmem_bytes > hw.vmem_budget:
+        return (f"vmem footprint {params.vmem_bytes} exceeds "
+                f"{hw.vmem_headroom:.0%} of {hw.vmem_capacity}")
     return ""
 
 

@@ -80,6 +80,7 @@ from repro.core.hardware import HardwareConfig
 from repro.core.measure_scheduler import MeasureScheduler
 from repro.core.runner import INVALID, Runner, run_batch as _run_batch
 from repro.core.sampler import TraceSampler
+from repro.core import static_analysis as static_lib
 from repro.core.schedule import Schedule
 from repro.core.workload import Workload
 
@@ -106,6 +107,11 @@ class TuneResult:
     # learning was disabled
     proposal_entropy: dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # candidate values the static analyzer filtered out of proposal
+    # (core/static_analysis.py). 0 certifies the search consumed a rng
+    # stream bit-identical to the pre-analyzer sampler: candidate sets with
+    # nothing to prune are passed through as the original tuple objects.
+    static_pruned: int = 0
 
     @property
     def mean_proposal_entropy(self) -> float:
@@ -169,7 +175,8 @@ class TuneDriver:
                  log: Callable[[str], None] | None = None,
                  learn_proposals: bool = True,
                  prior_distributions: Mapping[str, Mapping] | None = None,
-                 pretrain_cost_model: bool = False):
+                 pretrain_cost_model: bool = False,
+                 static_analysis: bool = True):
         self.workload, self.hw, self.runner = workload, hw, runner
         self.trials = trials
         self.batch = batch
@@ -186,6 +193,20 @@ class TuneDriver:
         # the generative design-space program (variant-conditioned tile
         # splits, postprocessor pipeline) this search samples and replays
         self.space = space_lib.space_for(workload, hw)
+        # Static feasibility: intersect every candidate set with the values
+        # provably able to complete into a postprocessor-valid schedule, so
+        # statically-dead candidates are never proposed. The wrapped program
+        # shares the original's instruction dists (proposal learning and
+        # persistence see the same state); static_pruned counts the values
+        # actually filtered at sampling time — 0 means every candidate set
+        # was passed through untouched and the rng stream is bit-identical
+        # to running with static_analysis=False.
+        self.static_pruned = 0
+        self.static_report = (static_lib.feasibility(workload, hw)
+                              if static_analysis else None)
+        if self.static_report is not None:
+            self.space = static_lib.pruned_program(
+                self.space, self.static_report, self._count_pruned)
         self.learn_proposals = learn_proposals
         if learn_proposals and prior_distributions:
             # transferred posteriors warm-start the proposals (Fig. 4 on
@@ -225,6 +246,10 @@ class TuneDriver:
         self._tries = 0  # phase-1 sampling attempts (bounded)
         self._phase = 0
         self._population_seeded = False
+
+    def _count_pruned(self, n: int) -> None:
+        """Prune-event sink for the statically-filtered program wrapper."""
+        self.static_pruned += n
 
     # ---- proposal --------------------------------------------------------------
     def _take(self, schedules: Sequence[Schedule]) -> list[Schedule]:
@@ -376,7 +401,7 @@ class TuneDriver:
             warm_started=self.warm_started, pipeline_depth=pipeline_depth,
             measure_time_s=self.measure_time_s, overlap_s=overlap,
             board_stats=summary() if callable(summary) else None,
-            proposal_entropy=entropy)
+            proposal_entropy=entropy, static_pruned=self.static_pruned)
 
 
 def timed_run_batch(runner: Runner, driver: TuneDriver,
@@ -462,7 +487,8 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
          pipeline_depth: int = 1,
          learn_proposals: bool = True,
          prior_distributions: Mapping[str, Mapping] | None = None,
-         pretrain_cost_model: bool = False) -> TuneResult:
+         pretrain_cost_model: bool = False,
+         static_analysis: bool = True) -> TuneResult:
     """Tune one workload. ``pipeline_depth`` bounds how many proposed batches
     may be in flight at once (1 = fully synchronous; see module docstring for
     the determinism guarantees of the pipelined mode); the ``learn_*`` /
@@ -473,7 +499,8 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
                         batch=batch, warm_start=warm_start, log=log,
                         learn_proposals=learn_proposals,
                         prior_distributions=prior_distributions,
-                        pretrain_cost_model=pretrain_cost_model)
+                        pretrain_cost_model=pretrain_cost_model,
+                        static_analysis=static_analysis)
     depth = effective_pipeline_depth(runner, pipeline_depth)
     if pipeline_depth <= 1:
         while (batch_s := driver.propose()) is not None:

@@ -20,6 +20,8 @@ def fresh_global():
 
 
 def _make_db_file(path, wl, variant, latency):
+    # load() statically verifies records, so on-disk fixtures must carry a
+    # real variant — artifacts are told apart by latency below instead
     db = TuningDatabase(str(path))
     db.add(wl, V5E.name, Schedule.fixed(variant=variant), latency, "analytic")
     db.save()
@@ -33,32 +35,32 @@ def test_global_database_reresolves_env_var(tmp_path, monkeypatch,
     in a live process — the first-seen value is no longer pinned."""
     wl = W.matmul(64, 64, 64)
     p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
-    _make_db_file(p1, wl, "from_a", 1e-3)
-    _make_db_file(p2, wl, "from_b", 2e-3)
+    _make_db_file(p1, wl, "mxu_min", 1e-3)
+    _make_db_file(p2, wl, "mxu_min", 2e-3)
 
     monkeypatch.setenv("REPRO_TUNING_DB", str(p1))
     db1 = global_database()
     assert db1.path == str(p1)
-    assert db1.best(wl, V5E.name)[0]["variant"] == "from_a"
+    assert db1.best(wl, V5E.name)[1] == 1e-3
     assert global_database() is db1  # same path -> cached instance
 
     monkeypatch.setenv("REPRO_TUNING_DB", str(p2))
     db2 = global_database()
     assert db2.path == str(p2)
-    assert db2.best(wl, V5E.name)[0]["variant"] == "from_b"
+    assert db2.best(wl, V5E.name)[1] == 2e-3
 
 
 def test_reset_global_database_rereads_disk(tmp_path, monkeypatch,
                                             fresh_global):
     wl = W.matmul(32, 32, 32)
     p = tmp_path / "db.json"
-    _make_db_file(p, wl, "v1", 1e-3)
+    _make_db_file(p, wl, "mxu_min", 1e-3)
     monkeypatch.setenv("REPRO_TUNING_DB", str(p))
-    assert global_database().best(wl, V5E.name)[0]["variant"] == "v1"
+    assert global_database().best(wl, V5E.name)[1] == 1e-3
     # another process ships a better artifact to the same path
-    _make_db_file(p, wl, "v2", 5e-4)
+    _make_db_file(p, wl, "mxu_min", 5e-4)
     reset_global_database()
-    assert global_database().best(wl, V5E.name)[0]["variant"] == "v2"
+    assert global_database().best(wl, V5E.name)[1] == 5e-4
 
 
 # ----------------------------------------------------------- persistence ----
@@ -112,11 +114,11 @@ def test_best_is_memoized_and_invalidated_by_add():
 def test_best_cache_invalidated_by_load(tmp_path):
     wl = W.matmul(64, 64, 64)
     p = tmp_path / "db.json"
-    _make_db_file(p, wl, "ondisk", 1e-3)
+    _make_db_file(p, wl, "mxu_min", 1e-3)
     db = TuningDatabase()
     assert db.best(wl, V5E.name) is None  # miss is cached too
     db.load(str(p))
-    assert db.best(wl, V5E.name)[0]["variant"] == "ondisk"
+    assert db.best(wl, V5E.name)[0]["variant"] == "mxu_min"
 
 
 def test_dispatch_provenance_flips_on_database_write():

@@ -119,13 +119,19 @@ def test_transfer_candidates_ranks_exact_then_near():
     near = W.matmul(512, 512, 512, "bfloat16")
     far = W.matmul(16, 16, 16, "bfloat16")
     target = W.matmul(600, 512, 512, "bfloat16")
-    db.add(near, V5E.name, Schedule.fixed(variant="near"), 2e-3, "analytic")
-    db.add(far, V5E.name, Schedule.fixed(variant="far"), 1e-3, "analytic")
-    db.add(target, V5E.name, Schedule.fixed(variant="exact"), 5e-3, "analytic")
+    # transfer screens seeds against each source key's feasible sets, so
+    # records carry a real variant; the extra "tag" decision (unknown to
+    # the space, like v1 *_scale keys) marks provenance for the assertion
+    db.add(near, V5E.name, Schedule.fixed(variant="mxu_512", tag="near"),
+           2e-3, "analytic")
+    db.add(far, V5E.name, Schedule.fixed(variant="mxu_min", tag="far"),
+           1e-3, "analytic")
+    db.add(target, V5E.name, Schedule.fixed(variant="mxu_512", tag="exact"),
+           5e-3, "analytic")
     db.add(W.vmacc(8, 8), V5E.name, Schedule.fixed(variant="other_op"),
            1e-6, "analytic")
     seeds = db.transfer_candidates(target, V5E.name, limit=3)
-    assert [s["variant"] for s in seeds] == ["exact", "near", "far"]
+    assert [s["tag"] for s in seeds] == ["exact", "near", "far"]
 
 
 # ------------------------------------------------------- tuning sessions ----

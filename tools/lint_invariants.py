@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""AST lint forbidding determinism hazards in the search/reconcile core.
+
+The tuning stack's central contract is bit-identical replay: a fixed seed
+must reproduce the same search history regardless of farm shape, runner
+speed, or host entropy (see ``core/tuner.py``). That contract dies quietly
+— an unseeded RNG here, a wall-clock-keyed decision there — so this lint
+makes the hazards structural errors in CI instead of flaky-test archaeology:
+
+- ``unseeded-rng``     ``np.random.default_rng()`` with no seed, any use of
+                       the global ``np.random.*`` / stdlib ``random.*``
+                       draw functions (module-global state, process-wide
+                       and import-order dependent).
+- ``wall-clock``       ``time.time()`` / ``datetime.now()`` and friends.
+                       Timing a measurement span is legitimate —
+                       ``time.perf_counter`` / ``time.monotonic`` are the
+                       blessed clocks and are not flagged — but calendar
+                       time feeding logic is not reproducible.
+- ``dict-order-rng``   an RNG draw (``integers``/``choice``/``shuffle``/
+                       ``permutation``/...) consuming ``set(...)`` or a
+                       dict view (``.keys()``/``.values()``/``.items()``)
+                       — iteration order of a set is salted per process,
+                       and a dict built in varying order silently reorders
+                       the candidate list behind a "deterministic" draw.
+
+Escape hatch: append ``# lint: allow(<rule>)`` on the offending line when
+the use is provably safe (e.g. a deliberately wall-clock-stamped log line).
+
+Usage: ``python tools/lint_invariants.py src/repro/core [more paths ...]``
+Exits 1 when any finding survives, printing ``path:line: rule: message``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+RNG_DRAW_METHODS = {"integers", "random", "choice", "shuffle", "permutation",
+                    "uniform", "normal", "standard_normal", "bytes"}
+STDLIB_RANDOM_FNS = {"random", "randint", "randrange", "choice", "choices",
+                     "shuffle", "sample", "uniform", "gauss", "seed",
+                     "betavariate", "normalvariate", "getrandbits"}
+WALL_CLOCK = {("time", "time"), ("time", "ctime"), ("time", "localtime"),
+              ("time", "gmtime"), ("datetime", "now"), ("datetime", "today"),
+              ("datetime", "utcnow"), ("date", "today")}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([a-z0-9_,\- ]+)\)")
+
+
+def _dotted(node: ast.AST) -> list[str]:
+    """The attribute chain of a node as names, e.g. np.random.default_rng
+    -> ['np', 'random', 'default_rng']; [] for non-name/attribute nodes."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return []
+
+
+def _consumes_unordered(node: ast.AST) -> bool:
+    """Does any subexpression produce a set or dict view (salted /
+    insertion-order-dependent iteration)?"""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        if isinstance(sub.func, ast.Attribute) and \
+                sub.func.attr in ("keys", "values", "items"):
+            return True
+        if isinstance(sub.func, ast.Name) and \
+                sub.func.id in ("set", "frozenset"):
+            return True
+        for comp in ast.walk(sub):
+            if isinstance(comp, ast.SetComp):
+                return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, filename: str):
+        self.filename = filename
+        self.findings: list[tuple[int, str, str]] = []
+
+    def _flag(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append((node.lineno, rule, message))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _dotted(node.func)
+        joined = ".".join(chain)
+        # -- unseeded-rng --
+        if chain and chain[-1] == "default_rng" and not node.args \
+                and not node.keywords:
+            self._flag(node, "unseeded-rng",
+                       f"{joined}() without a seed draws process entropy; "
+                       f"thread the caller's seed through")
+        elif len(chain) >= 2 and chain[0] == "random" \
+                and chain[-1] in STDLIB_RANDOM_FNS:
+            self._flag(node, "unseeded-rng",
+                       f"stdlib {joined}() uses module-global RNG state; "
+                       f"use a seeded np.random.Generator")
+        elif len(chain) >= 3 and chain[-2] == "random" \
+                and chain[0] in ("np", "numpy") \
+                and chain[-1] in (RNG_DRAW_METHODS | {"rand", "randn",
+                                                      "randint", "seed"}):
+            self._flag(node, "unseeded-rng",
+                       f"global {joined}() uses np.random's process-wide "
+                       f"state; use a seeded Generator instance")
+        # -- wall-clock --
+        if len(chain) >= 2 and (chain[-2], chain[-1]) in WALL_CLOCK:
+            self._flag(node, "wall-clock",
+                       f"{joined}() reads calendar time; use "
+                       f"time.perf_counter()/time.monotonic() for spans, "
+                       f"or pass timestamps in explicitly")
+        # -- dict-order-rng --
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in RNG_DRAW_METHODS \
+                and chain[:1] != ["random"]:
+            receiver = _dotted(node.func.value)
+            looks_rng = any("rng" in p.lower() or "random" in p.lower()
+                            for p in receiver) or not receiver
+            if looks_rng and any(_consumes_unordered(a) for a in node.args):
+                self._flag(node, "dict-order-rng",
+                           f"RNG draw {joined}(...) consumes a set or dict "
+                           f"view; materialize a deterministically-ordered "
+                           f"list (e.g. sorted(...) or dict.fromkeys) first")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, filename: str) -> list[str]:
+    """Lint one module's source; returns 'path:line: rule: message' rows
+    (suppressed rows excluded)."""
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as exc:
+        return [f"{filename}:{exc.lineno or 0}: parse-error: {exc.msg}"]
+    visitor = _Visitor(filename)
+    visitor.visit(tree)
+    lines = source.splitlines()
+    out = []
+    for lineno, rule, message in sorted(visitor.findings):
+        line = lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+        m = _ALLOW_RE.search(line)
+        allowed = {s.strip() for s in m.group(1).split(",")} if m else set()
+        if rule in allowed:
+            continue
+        out.append(f"{filename}:{lineno}: {rule}: {message}")
+    return out
+
+
+def lint_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def _iter_py(paths: list[str]):
+    for path in paths:
+        if os.path.isdir(path):
+            for root, _dirs, files in sorted(os.walk(path)):
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield os.path.join(root, name)
+        else:
+            yield path
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[-2].strip())
+        return 2
+    findings: list[str] = []
+    n_files = 0
+    for path in _iter_py(argv):
+        n_files += 1
+        findings.extend(lint_file(path))
+    for row in findings:
+        print(row)
+    status = "FAILED" if findings else "clean"
+    print(f"# lint_invariants: {n_files} file(s), "
+          f"{len(findings)} finding(s) — {status}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
