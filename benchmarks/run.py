@@ -509,6 +509,143 @@ def learn_suite(trials: int = 48) -> None:
         "count on any workload")
 
 
+# ------------------------------------------------- adaptive scheduling ----
+
+def sched_suite(trials: int = 12) -> None:
+    """Adaptive measurement scheduling (ISSUE 8): utilization-driven
+    speculation depth, entropy-gated budget reallocation, and priority
+    preemption. Doubles as the CI sched smoke; every claim is asserted.
+
+    Rows: (1) interleaved session on a heterogeneous 4-board farm, fixed
+    depth 1 vs ``adaptive_depth=True`` — the depth policy must buy >= 1.1x
+    wall on its own (same budget, same seed; trajectories legitimately
+    differ because speculation measures different candidates); plus a
+    single-workload ``tune(adaptive_depth=True)`` whose
+    ``TuneResult.depth_trace`` must show the depth actually growing.
+    (2) entropy stop policy at deterministic depth 1: vs the no-policy
+    baseline it must spend strictly fewer total measurements, fewer on at
+    least one workload, and reach equal-or-better best latency on *every*
+    workload (curtailed searches release budget; still-improving ones draw
+    it back through the shared ledger at ``reallocate_fraction=0.5``).
+    (3) farm priority preemption: a small high-priority batch submitted
+    behind a large backlog must complete in well under half the backlog's
+    wall (queued low-priority shards yield; in-flight shards finish), with
+    preemptions counted and per-candidate results identical to an
+    unprioritized run."""
+    # (1) adaptive speculation depth on a heterogeneous farm: at fixed
+    # depth 1 each driver keeps at most one batch in flight, so fast
+    # boards idle at every reconcile boundary; the policy grows depth
+    # per-driver while the farm's busy-fraction is below target.
+    ops = [(1, W.matmul(512, 512, 512, "bfloat16")),
+           (1, W.gemv(2048, 4096, "bfloat16"))]
+    hetero = [0.02, 0.04, 0.06, 0.08]
+    budget = max(trials, 8) * len(ops)
+    sessions = {}
+    for mode, adaptive in (("fixed_depth", False), ("adaptive_depth", True)):
+        farm = simulated_farm(4, V5E, delay_s=hetero,
+                              straggler_timeout_s=30.0)
+        res = TuningSession(V5E, farm, database=TuningDatabase(), batch=2,
+                            adaptive_depth=adaptive, max_depth=4,
+                            depth_window_s=1.0).tune_model(
+            ops, total_trials=budget, seed=0, model=f"sched-{mode}")
+        sessions[mode] = res
+        utils = [b["utilization"] for b in res.board_stats["boards"].values()]
+        emit(f"sched/session4_hetero_{mode}/tune_wall",
+             res.wall_time_s * 1e6,
+             f"trials={res.total_trials} mean_util={np.mean(utils):.2f} "
+             f"overlap={res.overlap_fraction:.2f} "
+             f"adaptive={res.adaptive_depth}")
+    gain = (sessions["fixed_depth"].wall_time_s
+            / sessions["adaptive_depth"].wall_time_s)
+    emit("sched/session4_hetero/adaptive_depth_speedup", gain, f"{gain:.2f}x")
+    assert gain >= 1.1, (
+        f"adaptive depth only {gain:.2f}x faster than fixed depth 1 on a "
+        f"heterogeneous 4-board farm (>= 1.1x required)")
+    # depth-trace observability: one workload, one farm — the trace must
+    # show the policy actually raising the effective depth beyond base
+    farm = simulated_farm(4, V5E, delay_s=hetero, straggler_timeout_s=30.0)
+    res = tune(W.matmul(512, 512, 512, "bfloat16"), V5E, farm,
+               trials=max(trials, 8) * 2, seed=0, batch=2,
+               pipeline_depth=2, adaptive_depth=True, max_depth=4)
+    peak = max(d for _, d in res.depth_trace)
+    emit("sched/depth_trace/peak_depth", float(peak),
+         f"trace={res.depth_trace}")
+    assert peak > 2, (
+        f"adaptive depth never grew past the base depth: {res.depth_trace}")
+
+    # (2) entropy-gated budget reallocation, deterministic regime: equal
+    # per-workload budgets (floor = share), analytic latencies, forced
+    # interleave at depth 1 so histories depend only on each driver's own
+    # reconcile order. The policy curtails converged searches and re-grants
+    # half the released budget to still-improving ones.
+    # flops-weighted budget split: the big matmul gets the long budget
+    # (and plateaus well before spending it — curtailed, releasing ~40
+    # trials), the small ops get the floor (and exhaust it while still
+    # improving — they draw grants back from the ledger)
+    ent_ops = [(1, W.matmul(512, 2048, 2048, "bfloat16")),
+               (1, W.gemv(2048, 8192, "bfloat16")),
+               (1, W.vmacc(2048, 2048))]
+    runs = {}
+    for mode, policy in (("no_stop", "none"), ("entropy", "entropy")):
+        runs[mode] = TuningSession(
+            V5E, AnalyticRunner(V5E), database=TuningDatabase(),
+            min_trials=24, interleave=True, stop_policy=policy,
+            plateau_patience=28, reallocate_fraction=0.5).tune_model(
+            ent_ops, total_trials=48 * len(ent_ops), seed=0,
+            model=f"sched-{mode}")
+        emit(f"sched/entropy_{mode}/total_trials",
+             float(runs[mode].total_trials),
+             f"stops={runs[mode].stopped_early} "
+             f"released={runs[mode].released_trials} "
+             f"realloc={runs[mode].reallocated_trials}")
+    base, pol = runs["no_stop"], runs["entropy"]
+    fewer = 0
+    for a, b in zip(base.reports, pol.reports):
+        emit(f"sched/entropy/{a.workload.key()}/best",
+             b.best_latency * 1e6,
+             f"no_stop_best={a.best_latency * 1e6:.2f} "
+             f"trials={b.trials}/{a.trials} "
+             f"stopped={b.stopped_early} granted={b.budget_granted}")
+        assert b.best_latency <= a.best_latency * (1 + 1e-9), (
+            f"entropy policy regressed {a.workload.key()}: "
+            f"{b.best_latency} vs {a.best_latency}")
+        if b.trials < a.trials:
+            fewer += 1
+    assert pol.stopped_early >= 1, (
+        "entropy stop policy never curtailed a converged search")
+    assert pol.total_trials < base.total_trials, (
+        f"entropy policy spent {pol.total_trials} measurements, baseline "
+        f"{base.total_trials}: must be strictly fewer")
+    assert fewer >= 1, (
+        "entropy policy never spent fewer measurements on any workload")
+
+    # (3) priority preemption on the farm: 2 boards, a 16-candidate
+    # backlog, then a 2-candidate priority-5 batch. Queued backlog shards
+    # yield to it (counted as preemptions); results match a plain run.
+    wl = W.matmul(256, 256, 256, "bfloat16")
+    pop = _candidate_population(wl, V5E, limit=18)
+    bulk_pop, hi_pop = pop[:16], pop[16:]
+    farm = simulated_farm(2, V5E, delay_s=0.02, straggler_timeout_s=30.0)
+    t0 = time.perf_counter()
+    bulk = farm.submit_batch(wl, bulk_pop, priority=0)
+    hi = farm.submit_batch(wl, hi_pop, priority=5)
+    hi_lats = hi.result()
+    t_hi = time.perf_counter() - t0
+    bulk_lats = bulk.result()
+    t_all = time.perf_counter() - t0
+    preempts = farm.farm_summary()["preemptions"]
+    emit("sched/priority/hipri_wall", t_hi * 1e6,
+         f"backlog_wall={t_all * 1e6:.0f} preemptions={preempts}")
+    assert t_hi < 0.5 * t_all, (
+        f"high-priority batch took {t_hi:.3f}s of the backlog's "
+        f"{t_all:.3f}s wall: the priority queue is not preempting")
+    assert preempts >= 1, "no preemption was counted for the priority jump"
+    plain = simulated_farm(2, V5E, delay_s=0.02, straggler_timeout_s=30.0)
+    assert (plain.run_batch(wl, bulk_pop) == bulk_lats
+            and plain.run_batch(wl, hi_pop) == hi_lats), (
+        "priorities changed measured results (must only change order)")
+
+
 # ---------------------------------------------------- cross-hw transfer ----
 
 def transfer_study(trials: int = 16) -> None:
@@ -583,10 +720,20 @@ def session_report(db: TuningDatabase) -> list[tuple[str, float, str]]:
             entropy = s.get("proposal_entropy")
             entropy_txt = (f"{entropy:.2f}"
                            if isinstance(entropy, (int, float)) else "n/a")
+            # adaptation column: curtailed searches / reallocated trials /
+            # priority preemptions (all 0 for non-adaptive sessions, n/a
+            # for summaries recorded before the adaptation layer existed)
+            if "stopped_early" in s:
+                adapt_txt = (f"stops={s.get('stopped_early', 0)}"
+                             f"/realloc={s.get('reallocated_trials', 0)}"
+                             f"/preempt={s.get('preemptions', 0)}")
+            else:
+                adapt_txt = "stops=n/a"
             rows.append((f"report/{model}/session{i}", tuned * 1e6,
                          f"{trend} speedup_vs_fixed={speedup_txt} "
                          f"overlap={overlap_txt} "
                          f"entropy={entropy_txt} "
+                         f"{adapt_txt} "
                          f"trials={s.get('total_trials', '?')}"))
             prev_latency = tuned
             best_latency = min(best_latency, tuned)
@@ -694,6 +841,7 @@ SUITES = {
     "farm": farm_suite,
     "transfer": transfer_study,
     "learn": learn_suite,
+    "sched": sched_suite,
 }
 
 _NO_TRIALS_ARG = ("tuning_cost", "space", "static")

@@ -21,7 +21,8 @@ from repro.core.cost_model import (RidgeCostModel, features,
 from repro.core.runner import (InterpretRunner, AnalyticRunner, run_batch,
                                xla_latency)
 from repro.core.measure_pool import MeasurePool, SubprocessRunner
-from repro.core.measure_scheduler import (MeasureScheduler, MeasureTicket,
+from repro.core.measure_scheduler import (AdaptiveDepthPolicy,
+                                          MeasureScheduler, MeasureTicket,
                                           SerialMeasureQueue)
 from repro.core.board_farm import (Board, BoardDied, BoardFarm, BoardStats,
                                    Fault, FarmDead, LocalBoard,
@@ -29,7 +30,8 @@ from repro.core.board_farm import (Board, BoardDied, BoardFarm, BoardStats,
 from repro.core.database import (TuningDatabase, global_database,
                                  reset_global_database)
 from repro.core.tuner import tune, TuneDriver, TuneResult
-from repro.core.session import (TuningSession, SessionResult, WorkloadReport,
+from repro.core.session import (BudgetLedger, EntropyStopPolicy,
+                                TuningSession, SessionResult, WorkloadReport,
                                 dedup_workloads, split_budget)
 from repro.core.dispatch import (best_schedule, ensure_tuned,
                                  fixed_library_schedule, kernel_params)
@@ -43,12 +45,14 @@ __all__ = [
     "Diagnostic", "SpaceReport", "analyze", "lint_space", "pruned_program",
     "RidgeCostModel", "features", "pretrain_from_database",
     "InterpretRunner", "AnalyticRunner", "SubprocessRunner", "MeasurePool",
-    "MeasureScheduler", "MeasureTicket", "SerialMeasureQueue",
+    "AdaptiveDepthPolicy", "MeasureScheduler", "MeasureTicket",
+    "SerialMeasureQueue",
     "Board", "BoardDied", "BoardFarm", "BoardStats", "Fault", "FarmDead",
     "LocalBoard", "SimulatedBoard", "simulated_farm",
     "run_batch", "xla_latency",
     "TuningDatabase", "global_database", "reset_global_database",
     "tune", "TuneDriver", "TuneResult",
+    "BudgetLedger", "EntropyStopPolicy",
     "TuningSession", "SessionResult", "WorkloadReport", "dedup_workloads",
     "split_budget", "best_schedule", "ensure_tuned",
     "fixed_library_schedule", "kernel_params",

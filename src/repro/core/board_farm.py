@@ -346,6 +346,8 @@ class _WorkItem:
     workload: Workload
     schedule: Schedule
     attempts: int = 0
+    priority: int = 0  # submission priority class (higher dispatches first)
+    bypass: int = 0  # dispatch rounds a higher-priority item jumped this one
 
 
 _WAKE = (None, "wake", None)  # queue sentinel: new work arrived
@@ -375,6 +377,18 @@ class BoardFarm:
       (``straggler_timeout_s`` or the board's own ``timeout_s``) is
       abandoned and declared dead; its dispatch thread is daemonized and
       its late result, should it ever arrive, is dropped by token;
+    - **priority preemption** — ``submit_batch(..., priority=)`` tags every
+      candidate; an idle board pulls the highest-effective-priority queued
+      candidates first (queue order within a class), so a high-priority
+      batch preempts bulk backlog at *shard* granularity — in-flight shards
+      always finish, only queued candidates yield. Starvation is bounded by
+      an aging credit: every dispatch round that jumps a queued candidate
+      raises its effective priority by ``1/aging_every``, so bulk work
+      eventually outranks a steady high-priority stream. With every
+      submission at the default priority the pull order is exactly the old
+      FIFO (the determinism baseline), and in all cases a candidate's
+      *latency* is unaffected — priorities reorder completion, never
+      results;
     - **requeue** — candidates of a dead/abandoned board go back on the
       queue for the survivors — including candidates the board held for
       several different batches — at most ``max_retries`` times each, then
@@ -391,6 +405,8 @@ class BoardFarm:
     """
 
     overlap_capable = True
+    # submit_batch accepts priority= and the dispatcher honours it
+    supports_priority = True
     # the farm refuses statically-invalid work itself (no scheduler-side
     # screening needed — rejections are counted exactly once, here)
     static_screens = True
@@ -400,7 +416,8 @@ class BoardFarm:
 
     def __init__(self, boards: Sequence[Board], hw: HardwareConfig | None = None,
                  name: str = "farm", max_retries: int = 2,
-                 straggler_timeout_s: float = 60.0, max_respawns: int = 1):
+                 straggler_timeout_s: float = 60.0, max_respawns: int = 1,
+                 aging_every: int = 4):
         boards = list(boards)
         if not boards:
             raise ValueError("a BoardFarm needs at least one board")
@@ -412,10 +429,14 @@ class BoardFarm:
         self.name = name
         self.max_retries = max(0, int(max_retries))
         self.straggler_timeout_s = straggler_timeout_s
+        # bypass rounds per +1 effective priority for a jumped candidate
+        # (the anti-starvation aging credit)
+        self.aging_every = max(1, int(aging_every))
         self._respawns_left = {b.name: max(0, int(max_respawns))
                                for b in boards}
         # farm-level counters, cumulative across batches
         self.requeues = 0  # candidate requeue events
+        self.preemptions = 0  # dispatches that jumped lower-priority queue
         self.retry_exhausted = 0  # candidates INVALID after max_retries
         self.garbage_sanitized = 0  # non-physical latencies mapped to INVALID
         self.static_rejected = 0  # candidates refused before dispatch
@@ -471,7 +492,8 @@ class BoardFarm:
         return rejected
 
     def submit_batch(self, workload: Workload,
-                     schedules: Sequence[Schedule]) -> _FarmTicket:
+                     schedules: Sequence[Schedule],
+                     priority: int = 0) -> _FarmTicket:
         ticket = _FarmTicket(workload, schedules)
         if not ticket.schedules:
             ticket._complete([])
@@ -493,7 +515,7 @@ class BoardFarm:
                     and not self._work:
                 self._span_t0 = time.monotonic()
             self._work.extend(
-                _WorkItem(ticket, i, workload, s)
+                _WorkItem(ticket, i, workload, s, priority=int(priority))
                 for i, s in enumerate(ticket.schedules)
                 if i not in rejected)
             self._ensure_dispatcher()
@@ -534,16 +556,48 @@ class BoardFarm:
             return INVALID
         return lat
 
+    def _eff_priority(self, item: _WorkItem) -> int:
+        """Submission priority plus the aging credit: every
+        ``aging_every`` dispatch rounds a queued candidate is jumped raise
+        its effective class by one, bounding starvation under a steady
+        high-priority stream."""
+        return item.priority + item.bypass // self.aging_every
+
+    def _take_shard_locked(self, n: int) -> list[_WorkItem]:
+        """Pop the ``n`` highest-effective-priority queued candidates
+        (queue order within a class — with all priorities equal this is
+        exactly the old FIFO ``popleft``). Jumped candidates earn a bypass
+        credit; dispatches that jump queued work count as preemptions."""
+        work = list(self._work)
+        order = sorted(range(len(work)),
+                       key=lambda i: (-self._eff_priority(work[i]), i))
+        taken = sorted(order[:n])  # chosen items, back in queue order
+        taken_set = set(taken)
+        # the sort key makes any jump a *strict* effective-priority jump:
+        # an equal-priority later item can never be taken over an earlier
+        # one, so all-default-priority traffic hits neither branch below
+        last_taken = taken[-1] if taken else -1
+        for pos, item in enumerate(work):
+            if pos in taken_set:
+                if any(j < pos and j not in taken_set for j in range(pos)):
+                    self.preemptions += 1
+            elif pos < last_taken:
+                item.bypass += 1
+        self._work = deque(work[i] for i in range(len(work))
+                           if i not in taken_set)
+        return [work[i] for i in taken]
+
     def _dispatch_locked(self) -> None:
-        """Hand shards to idle healthy boards from the shared queue; a
-        shard may span batch (ticket) boundaries."""
+        """Hand shards to idle healthy boards from the shared queue in
+        effective-priority order; a shard may span batch (ticket)
+        boundaries."""
         for board in self.boards:
             if not self._work:
                 return
             if not board.healthy or board.name in self._busy:
                 continue
-            shard = [self._work.popleft()
-                     for _ in range(min(board.capacity, len(self._work)))]
+            shard = self._take_shard_locked(
+                min(board.capacity, len(self._work)))
             token = next(self._tokens)
             board.stats.dispatched += len(shard)
             self._busy.add(board.name)
@@ -704,6 +758,7 @@ class BoardFarm:
                 "utilization": (b.stats.busy_s / wall) if wall > 0 else 0.0,
             } for b in self.boards},
             "requeues": self.requeues,
+            "preemptions": self.preemptions,
             "invalid_after_retries": self.retry_exhausted,
             "garbage_sanitized": self.garbage_sanitized,
             "static_rejected": self.static_rejected,

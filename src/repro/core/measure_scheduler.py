@@ -1,34 +1,58 @@
-"""Multi-queue measurement scheduling — batches from many drivers in flight.
+"""Adaptive multi-queue measurement scheduling.
 
 On the paper's board farm, measurement wall-time dominates tuning; PR 4's
 :class:`~repro.core.board_farm.BoardFarm` parallelized *within* one candidate
-batch, but the tuner/session loop still drove every driver's batches through
-one FIFO measurement thread — so a farm's boards idled at every batch
-boundary and whenever one workload's queue drained. This module closes that
-gap with three pieces:
+batch, and the multi-queue scheduler here (PR 5) keeps batches from many
+drivers in flight at once so boards never idle at batch boundaries. This
+module now also owns the *adaptation* layer (PR 8): how deep each driver
+speculates is a policy decision driven by observed farm utilization, and
+batches carry priority classes so interactive work preempts bulk sweeps.
+
+The pieces:
 
 - **Async submission protocol** (duck-typed on ``Runner``): a runner may
   expose ``submit_batch(workload, schedules) -> ticket`` returning a
   :class:`MeasureTicket` (a future: ``done()``/``result()``) plus a
   ``max_inflight`` capacity hint — how many submitted batches can make
   *physical* progress concurrently (1 for a single measurement target; a
-  board farm reports its board count).
+  board farm reports its board count). Backends that additionally declare
+  ``supports_priority`` accept a ``priority=`` keyword on ``submit_batch``
+  and dispatch higher-priority batches first.
 - :class:`SerialMeasureQueue` — the default adapter wrapping any synchronous
-  ``run_batch`` runner behind one FIFO measurement thread, so
+  ``run_batch`` runner behind one measurement thread, so
   ``AnalyticRunner``/``InterpretRunner``/``SubprocessRunner`` need no
-  changes (and it reproduces the old single-queue behaviour exactly, which
-  the multi-queue-vs-single-FIFO benchmarks and determinism tests rely on).
+  changes. The queue is priority-ordered (FIFO within a priority class), so
+  even single-target runners let an interactive job jump a bulk backlog;
+  with every submission at the default priority it is exactly the old
+  single-FIFO pipeline (the determinism baseline).
 - :class:`MeasureScheduler` — holds many tickets from many submitters
   (drivers) in flight at once, hands back completed batches **per-submitter
   FIFO** (the determinism contract: each driver reconciles its own batches
-  in submission order; *which* driver reconciles next may follow completion,
-  which never leaks into any driver's trajectory), and tracks real
-  busy/wait *intervals* so measurement/search overlap and utilization are
-  span-accurate under concurrency instead of estimated from summed totals.
+  in submission order; *which* driver reconciles next may follow completion
+  and priority, which never leaks into any driver's trajectory), and tracks
+  real busy/wait *intervals* — per submitter — so measurement/search
+  overlap, utilization, and per-driver wait attribution are span-accurate
+  under concurrency instead of estimated from summed totals.
+- :class:`AdaptiveDepthPolicy` — the utilization-driven speculation-depth
+  controller ``tuner.run_scheduled`` consults when adaptation is enabled.
+  It grows a driver's effective depth beyond the requested
+  ``pipeline_depth`` (bounded by ``max_depth`` and the backend's
+  ``max_inflight`` hint) while the farm's busy-fraction over a sliding
+  window sits below target, and shrinks it back toward the base depth when
+  reconciliation lag — batches evolved against constant-liar predictions
+  that were later corrected — exceeds a threshold. The policy never reads a
+  clock: its "now" is derived from the scheduler's recorded span intervals
+  (:meth:`MeasureScheduler.busy_fraction`), so an adaptive run is
+  reproducible given a scripted clock (simulated boards with scripted
+  delays), and ``tools/lint_invariants.py`` structurally forbids wall-clock
+  reads inside policy classes. Adaptation is **off by default**: with it
+  disabled, fixed-seed histories are bit-identical to the non-adaptive
+  scheduler.
 
 ``tuner.run_scheduled`` (and through it ``tune`` and
 ``TuningSession``) is built on this scheduler; ``BoardFarm`` implements the
-protocol natively with a persistent cross-batch work-stealing dispatcher.
+protocol natively with a persistent cross-batch work-stealing dispatcher
+whose pull order is priority-aware with an anti-starvation aging credit.
 
 Statically-invalid work is refused before it reaches a backend: schedules
 the feasibility analyzer (``core/static_analysis.py``) proves can never
@@ -40,6 +64,7 @@ themselves so rejections are counted exactly once.
 
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -179,17 +204,27 @@ class _ScreenedTicket(MeasureTicket):
 
 
 class SerialMeasureQueue:
-    """Default async adapter: one FIFO measurement thread over a synchronous
-    runner — exactly the single-queue pipeline ``run_pipelined`` used to
-    hard-code, packaged behind the submission protocol so runners without a
+    """Default async adapter: one measurement thread over a synchronous
+    runner, packaged behind the submission protocol so runners without a
     native ``submit_batch`` need no changes. ``max_inflight = 1``: extra
-    submissions queue behind the single measurement thread."""
+    submissions queue behind the single measurement thread.
+
+    The queue is priority-ordered: a later high-priority submission is
+    measured before earlier default-priority backlog (FIFO within a
+    priority class, so all-default-priority traffic reproduces the old
+    single-FIFO pipeline exactly — the determinism baseline the multi-queue
+    benchmarks compare against). An in-progress batch is never interrupted;
+    preemption is at batch granularity."""
 
     max_inflight = 1
+    supports_priority = True
 
     def __init__(self, runner):
         self.runner = runner
-        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        # entries: (-priority, submission seq, ticket); the close sentinel
+        # sorts last so pending work drains before the thread exits
+        self._q: queue.PriorityQueue = queue.PriorityQueue()
+        self._seq = itertools.count()
         self._thread: threading.Thread | None = None
         self._closed = False
 
@@ -209,8 +244,8 @@ class SerialMeasureQueue:
         from repro.core.runner import run_batch as _run_batch
 
         while True:
-            ticket = self._q.get()
-            if ticket is None:  # close sentinel
+            _, _, ticket = self._q.get()
+            if ticket is None:  # close sentinel (sorts after pending work)
                 return
             ticket._mark_started()
             try:
@@ -222,18 +257,19 @@ class SerialMeasureQueue:
                 ticket._complete(lats)
 
     def submit_batch(self, workload: Workload,
-                     schedules: Sequence[Schedule]) -> MeasureTicket:
+                     schedules: Sequence[Schedule],
+                     priority: int = 0) -> MeasureTicket:
         if self._closed:
             raise RuntimeError("measurement queue is closed")
         ticket = MeasureTicket(workload, schedules)
         self._ensure_thread()
-        self._q.put(ticket)
+        self._q.put((-int(priority), next(self._seq), ticket))
         return ticket
 
     def close(self) -> None:
         self._closed = True
         if self._thread is not None:
-            self._q.put(None)
+            self._q.put((float("inf"), next(self._seq), None))
             self._thread.join(timeout=5.0)
             self._thread = None
 
@@ -250,32 +286,49 @@ def _union_length(intervals: Sequence[tuple[float, float]]) -> float:
     return total
 
 
+def _clipped_length(intervals: Sequence[tuple[float, float]],
+                    lo: float, hi: float) -> float:
+    """Summed (not unioned) interval length inside [lo, hi] — interval
+    overlap is concurrency, which the busy-fraction signal wants counted."""
+    total = 0.0
+    for a, b in intervals:
+        total += max(0.0, min(b, hi) - max(a, lo))
+    return total
+
+
 class _Entry:
     """One in-flight submission; ordering is the _fifo deque's position."""
 
-    __slots__ = ("key", "batch", "ticket")
+    __slots__ = ("key", "batch", "ticket", "priority")
 
-    def __init__(self, key, batch, ticket):
+    def __init__(self, key, batch, ticket, priority=0):
         self.key, self.batch, self.ticket = key, batch, ticket
+        self.priority = priority
 
 
 class MeasureScheduler:
     """Hold measurement batches from several submitters in flight at once.
 
-    ``submit(key, workload, schedules)`` pushes one batch for submitter
-    ``key`` (a driver index, a baseline slot, ...); ``collect_next()``
-    blocks for the next reconcilable batch and returns ``(key, batch,
-    latencies, wait_s, measure_s)``. Two ordering guarantees:
+    ``submit(key, workload, schedules, priority=0)`` pushes one batch for
+    submitter ``key`` (a driver index, a baseline slot, ...);
+    ``collect_next()`` blocks for the next reconcilable batch and returns
+    ``(key, batch, latencies, wait_s, measure_s)``. Ordering guarantees:
 
     - **per-key FIFO** — a key's batches always come back in its own
       submission order (what deterministic trace replay requires);
-    - **completion-aware across keys** — if any in-flight ticket has already
-      completed, the earliest-*submitted* completed one is returned without
-      blocking, so its submitter can be topped up immediately; only when
-      nothing is ready does the call block on the globally oldest ticket.
-      Which key is picked is a wall-clock observation, but it can never
-      change any single key's reconcile order — per-key trajectories stay
+    - **completion- and priority-aware across keys** — if any in-flight
+      ticket has already completed, the highest-priority (then
+      earliest-*submitted*) completed one is returned without blocking, so
+      its submitter can be topped up immediately; only when nothing is
+      ready does the call block on the oldest outstanding work. Which key
+      is picked is a wall-clock observation, but it can never change any
+      single key's reconcile order — per-key trajectories stay
       bit-identical to the single-FIFO schedule.
+
+    ``priority`` is forwarded to backends that declare
+    ``supports_priority`` (the serial queue and the board farm), so a
+    high-priority batch also jumps the *backend's* queue, preempting bulk
+    work at shard granularity.
 
     ``multi_queue=None`` (auto) uses the runner's native ``submit_batch``
     when it has one (a :class:`~repro.core.board_farm.BoardFarm`); pass
@@ -285,11 +338,12 @@ class MeasureScheduler:
     resulting ``multi_queue`` attribute for the effective mode.
 
     The scheduler records every ticket's real measuring interval and every
-    interval the consuming thread spent *blocked* in ``collect_next``;
-    :meth:`overlap_s` is then span-accurate — measurement wall-time during
-    which the consumer was doing something other than waiting — rather than
-    the old ``max(0, Σmeasure − Σwait)`` estimate, which under-/over-counts
-    as soon as batches overlap each other.
+    interval the consuming thread spent *blocked* in ``collect_next`` —
+    attributed to the key whose batch the wait produced — so
+    :meth:`overlap_s`, :meth:`measure_span_s`, and :meth:`wait_span_s` are
+    span-accurate both globally and per key, and :meth:`busy_fraction`
+    derives the farm-utilization signal the adaptive depth policy consumes
+    without any policy-side clock read.
     """
 
     def __init__(self, runner, multi_queue: bool | None = None):
@@ -302,10 +356,12 @@ class MeasureScheduler:
             self._backend, self._owns_backend = SerialMeasureQueue(runner), True
         self.max_inflight = max(1, int(getattr(self._backend,
                                                "max_inflight", 1)))
+        self._priority_backend = bool(getattr(self._backend,
+                                              "supports_priority", False))
         self._fifo: deque[_Entry] = deque()  # global submission order
         self._any_done = threading.Event()  # set whenever any ticket lands
         self._measure_ivs: dict[Any, list[tuple[float, float]]] = {}
-        self._wait_ivs: list[tuple[float, float]] = []
+        self._wait_ivs: dict[Any, list[tuple[float, float]]] = {}
         # schedules refused before reaching the backend because the static
         # analyzer proved them infeasible (their slots return INVALID
         # without burning measurement time); see _screen
@@ -331,12 +387,21 @@ class MeasureScheduler:
             return None  # unscreenable schedules: let the backend decide
         return verdicts if any(verdicts) else None
 
+    def _submit_backend(self, workload: Workload,
+                        schedules: list[Schedule],
+                        priority: int) -> MeasureTicket:
+        if self._priority_backend:
+            return self._backend.submit_batch(workload, schedules,
+                                              priority=priority)
+        return self._backend.submit_batch(workload, schedules)
+
     def submit(self, key: Any, workload: Workload,
-               schedules: Sequence[Schedule]) -> MeasureTicket:
+               schedules: Sequence[Schedule],
+               priority: int = 0) -> MeasureTicket:
         schedules = list(schedules)
         verdicts = self._screen(workload, schedules)
         if verdicts is None:
-            ticket = self._backend.submit_batch(workload, list(schedules))
+            ticket = self._submit_backend(workload, list(schedules), priority)
         else:
             # ship only the statically-defensible subset; the rejected
             # slots come back INVALID without occupying the backend at all
@@ -344,11 +409,11 @@ class MeasureScheduler:
             self.static_rejected += len(schedules) - len(keep)
             inner = None
             if keep:
-                inner = self._backend.submit_batch(
-                    workload, [schedules[i] for i in keep])
+                inner = self._submit_backend(
+                    workload, [schedules[i] for i in keep], priority)
             ticket = _ScreenedTicket(workload, schedules, inner, keep)
         ticket.subscribe(self._any_done)
-        self._fifo.append(_Entry(key, schedules, ticket))
+        self._fifo.append(_Entry(key, schedules, ticket, priority))
         return ticket
 
     def inflight(self, key: Any = None) -> int:
@@ -357,16 +422,21 @@ class MeasureScheduler:
         return sum(1 for e in self._fifo if e.key == key)
 
     def _next_ready(self) -> "_Entry | None":
-        """Earliest-submitted completed entry that is also its key's oldest
-        in-flight entry (the per-key FIFO eligibility rule)."""
+        """Highest-priority, then earliest-submitted, completed entry that
+        is also its key's oldest in-flight entry (the per-key FIFO
+        eligibility rule — a key's later completions wait for its head)."""
         blocked: set = set()
+        best: _Entry | None = None
         for entry in self._fifo:
             if entry.key in blocked:
                 continue
-            if entry.ticket.done():
-                return entry
+            # only a key's oldest in-flight entry is ever eligible,
+            # completed or not
             blocked.add(entry.key)
-        return None
+            if entry.ticket.done() and (best is None
+                                        or entry.priority > best.priority):
+                best = entry  # fifo scan: earliest wins within a priority
+        return best
 
     # ---- collection ------------------------------------------------------------
     def collect_next(self) -> tuple[Any, list[Schedule], list[float],
@@ -378,12 +448,12 @@ class MeasureScheduler:
             raise RuntimeError("collect_next() with nothing in flight")
         t0 = time.monotonic()
         # Wait until some key's HEAD ticket completes, then take the
-        # earliest-submitted such entry — never block on the global head
-        # while a later ticket's submitter could be topped up. Only a key's
-        # oldest in-flight entry is eligible (per-key FIFO: a driver whose
-        # second batch finished before its first must wait for the first),
-        # and the clear-then-rescan pattern makes a racing completion at
-        # worst one poll-timeout late.
+        # highest-priority earliest-submitted such entry — never block on
+        # the global head while a later ticket's submitter could be topped
+        # up. Only a key's oldest in-flight entry is eligible (per-key
+        # FIFO: a driver whose second batch finished before its first must
+        # wait for the first), and the clear-then-rescan pattern makes a
+        # racing completion at worst one poll-timeout late.
         while True:
             entry = self._next_ready()
             if entry is not None:
@@ -399,7 +469,10 @@ class MeasureScheduler:
         finally:
             t1 = time.monotonic()
             if t1 > t0:
-                self._wait_ivs.append((t0, t1))
+                # the blocked interval is attributed to the key whose batch
+                # the wait produced — per-driver wait spans stay meaningful
+                # in an interleaved session (satellite: wait_span_s(key=))
+                self._wait_ivs.setdefault(entry.key, []).append((t0, t1))
             iv = entry.ticket.interval()
             if iv is not None:
                 self._measure_ivs.setdefault(entry.key, []).append(iv)
@@ -412,24 +485,62 @@ class MeasureScheduler:
             return [iv for ivs in self._measure_ivs.values() for iv in ivs]
         return list(self._measure_ivs.get(key, ()))
 
+    def _waits(self, key: Any = None) -> list[tuple[float, float]]:
+        if key is None:
+            return [iv for ivs in self._wait_ivs.values() for iv in ivs]
+        return list(self._wait_ivs.get(key, ()))
+
     def measure_span_s(self, key: Any = None) -> float:
         """Wall-clock during which the backend was measuring (union of the
         collected tickets' real intervals — not a sum, so concurrent
         batches are not double-counted)."""
         return _union_length(self._intervals(key))
 
-    def wait_span_s(self) -> float:
-        """Wall-clock the consuming thread spent blocked on tickets."""
-        return _union_length(self._wait_ivs)
+    def wait_span_s(self, key: Any = None) -> float:
+        """Wall-clock the consuming thread spent blocked on tickets —
+        for one key, only the blocked intervals that produced *that key's*
+        batches (per-driver wait attribution in interleaved sessions; the
+        keyless form is the union across all keys, as before)."""
+        return _union_length(self._waits(key))
 
     def overlap_s(self, key: Any = None) -> float:
         """Measurement wall-time hidden behind other (search) work: the
         measuring span minus the part of it the consumer spent blocked —
         by inclusion-exclusion, |measure ∪ wait| − |wait| (measuring time
-        that fell outside every wait interval)."""
+        that fell outside every wait interval). Per key, both spans are
+        that key's own (its batches, the waits that produced them)."""
         ivs = self._intervals(key)
-        return max(0.0, _union_length(ivs + self._wait_ivs)
-                   - _union_length(self._wait_ivs))
+        waits = self._waits(key)
+        return max(0.0, _union_length(ivs + waits) - _union_length(waits))
+
+    def busy_fraction(self, window_s: float = 2.0) -> float:
+        """Mean measuring concurrency over the trailing window, relative to
+        the backend's ``max_inflight`` capacity — the utilization signal
+        the adaptive depth policy consumes.
+
+        Derived **entirely from recorded span intervals**: "now" is the
+        latest recorded interval edge (or an in-flight ticket's start), not
+        a clock read, so the signal is reproducible under a scripted clock
+        and the policy layer on top of it stays free of wall-clock reads
+        (enforced by ``tools/lint_invariants.py``). In-flight tickets count
+        as busy from their real dispatch start to the derived now. Returns
+        0.0 before any measurement has started; capped at 1.0 (ticket
+        concurrency can exceed the board count transiently when shards
+        interleave)."""
+        done = self._intervals()
+        open_ivs = [(e.ticket.t_start, None) for e in self._fifo
+                    if e.ticket.t_start is not None and not e.ticket.done()]
+        edges = [b for _, b in done] + [a for a, _ in open_ivs]
+        edges += [b for _, b in self._waits()]
+        if not edges:
+            return 0.0
+        now = max(edges)
+        starts = [a for a, _ in done] + [a for a, _ in open_ivs]
+        horizon = max(1e-9, min(float(window_s), now - min(starts)))
+        lo = now - horizon
+        busy = _clipped_length(done, lo, now)
+        busy += _clipped_length([(a, now) for a, _ in open_ivs], lo, now)
+        return min(1.0, busy / (horizon * self.max_inflight))
 
     # ---- lifecycle -------------------------------------------------------------
     def close(self) -> None:
@@ -441,3 +552,89 @@ class MeasureScheduler:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class AdaptiveDepthPolicy:
+    """Utilization-driven speculation-depth controller (off by default in
+    every entry point — ``tune``/``TuningSession`` construct one only when
+    asked, so fixed-seed histories stay bit-identical to the non-adaptive
+    scheduler unless adaptation is explicitly enabled).
+
+    ``tuner.run_scheduled`` asks :meth:`depth` for each driver's current
+    effective depth before topping it up and calls :meth:`on_collect` after
+    every reconcile. The controller:
+
+    - **grows** a driver's depth by one — beyond the requested
+      ``base_depth``, up to ``min(max_depth, max_inflight + 1)`` — when the
+      backend's busy-fraction over the trailing ``window_s`` sits below
+      ``target_utilization`` (boards are starving at the current depth
+      boundary) — but never while mean reconciliation lag is already over
+      ``lag_threshold``, so lag-shrink and idle-grow cannot saw against
+      each other at the base depth;
+    - **shrinks** it back toward ``base_depth`` when the driver's mean
+      reconciliation lag (batches it proposed against constant-liar
+      predictions that were still uncorrected when this batch reconciled)
+      exceeds ``lag_threshold`` — deep speculation on stale predictions
+      degrades search quality faster than it fills boards;
+    - changes at most once per ``cooldown`` reconciles per driver, so one
+      noisy window reading cannot saw the depth.
+
+    Determinism: the policy reads only the scheduler's recorded span
+    intervals (see :meth:`MeasureScheduler.busy_fraction`) and per-driver
+    reconcile counts — never a clock (``tools/lint_invariants.py`` forbids
+    wall-clock reads inside ``*Policy``/``*Ledger`` classes). Given a
+    scripted clock (simulated boards with scripted delays) an adaptive run
+    replays reproducibly; with the policy absent the scheduler loop is
+    untouched.
+    """
+
+    def __init__(self, base_depth: int, max_depth: int = 8,
+                 target_utilization: float = 0.75, window_s: float = 2.0,
+                 lag_threshold: float = 4.0, cooldown: int = 2):
+        self.base_depth = max(1, int(base_depth))
+        self.max_depth = max(self.base_depth, int(max_depth))
+        self.target_utilization = float(target_utilization)
+        self.window_s = float(window_s)
+        self.lag_threshold = float(lag_threshold)
+        self.cooldown = max(1, int(cooldown))
+        self._depths: dict[Any, int] = {}
+        self._lags: dict[Any, deque] = {}
+        self._since_change: dict[Any, int] = {}
+        # (collect ordinal, key, depth) rows for every change — the raw
+        # material of TuneResult.depth_trace and tests
+        self.events: list[tuple[int, Any, int]] = []
+        self._collects = 0
+
+    def depth(self, key: Any) -> int:
+        """Current effective speculation depth for ``key``."""
+        return self._depths.get(key, self.base_depth)
+
+    def on_collect(self, key: Any, scheduler: MeasureScheduler,
+                   lag: int) -> None:
+        """Fold one reconcile into the controller: ``lag`` is how many of
+        ``key``'s batches were still in flight (proposed against the
+        constant liar) when the collected batch reconciled."""
+        self._collects += 1
+        self._lags.setdefault(key, deque(maxlen=8)).append(max(0, int(lag)))
+        since = self._since_change.get(key, self.cooldown) + 1
+        self._since_change[key] = since
+        if since < self.cooldown:
+            return
+        depth = self.depth(key)
+        cap = min(self.max_depth,
+                  max(self.base_depth, scheduler.max_inflight + 1))
+        lags = self._lags[key]
+        mean_lag = sum(lags) / len(lags)
+        if mean_lag > self.lag_threshold and depth > self.base_depth:
+            self._set(key, depth - 1)
+        elif depth < cap and mean_lag <= self.lag_threshold and \
+                scheduler.busy_fraction(self.window_s) \
+                < self.target_utilization:
+            self._set(key, depth + 1)
+        elif depth > cap:  # backend shrank (board deaths): clamp down
+            self._set(key, cap)
+
+    def _set(self, key: Any, depth: int) -> None:
+        self._depths[key] = depth
+        self._since_change[key] = 0
+        self.events.append((self._collects, key, depth))

@@ -37,10 +37,22 @@ batches can make *physical* progress concurrently. The
 batches from many tuning drivers in flight on the runner at once (a
 :class:`~repro.core.board_farm.BoardFarm` implements this natively with a
 cross-batch work-stealing dispatcher). Runners without it — everything in
-this module — are wrapped in the scheduler's default single-FIFO
+this module — are wrapped in the scheduler's default priority-ordered
 measurement thread (:class:`~repro.core.measure_scheduler.
 SerialMeasureQueue`) and need no changes; their ``max_inflight`` is 1:
 only one batch measures at a time, whatever is queued behind it.
+
+The ``max_inflight`` hint does double duty: besides sizing the scheduler's
+capacity, ``tuner.effective_pipeline_depth`` clamps a requested speculation
+depth to ``max_inflight + 1`` (one batch per concurrently-progressing slot
+plus one being evolved) — deeper requests would only park batches in the
+backend's queue while the search speculates against stale predictions —
+and the :class:`~repro.core.measure_scheduler.AdaptiveDepthPolicy` treats
+the same bound as its growth ceiling. Runners that declare no hint are
+taken at the requested depth. Backends that additionally declare
+``supports_priority`` accept ``submit_batch(..., priority=)`` and serve
+higher-priority batches first (see ``measure_scheduler.py``); the hint is
+purely about *capacity* and is unaffected by priorities.
 """
 
 from __future__ import annotations
@@ -67,11 +79,17 @@ class Runner(Protocol):
     # Optional (duck-typed, defaults False): True if measurement has real
     # wall-clock latency the tuner can hide search work behind.
     # overlap_capable: bool
-    # Optional (duck-typed, defaults 1): how many submitted batches make
-    # physical progress concurrently — the MeasureScheduler capacity hint.
+    # Optional (duck-typed): how many submitted batches make physical
+    # progress concurrently — the MeasureScheduler capacity hint, and the
+    # bound effective_pipeline_depth clamps speculation depth to (+1).
+    # Absent = capacity unknown: the scheduler assumes 1, the depth clamp
+    # is skipped.
     # max_inflight: int
     # Optional async submission protocol (see module docstring):
     # def submit_batch(self, workload, schedules) -> MeasureTicket: ...
+    # Optional (duck-typed, defaults False): submit_batch accepts a
+    # priority= keyword and serves higher-priority batches first.
+    # supports_priority: bool
 
     def run(self, workload: Workload, schedule: Schedule) -> float:
         """Latency in seconds; inf if the candidate is invalid."""

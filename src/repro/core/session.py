@@ -39,11 +39,37 @@ across runs. A :class:`TuningSession` closes that gap:
   transfer seeds are drawn from the database as it stood when the session
   began. Instantaneous runners (the analytic model) keep the serial path
   and its chaining.
+- **adaptation** (all off by default, so fixed-seed histories stay
+  bit-identical to the non-adaptive session) — ``adaptive_depth=True``
+  hands the interleaved executor an
+  :class:`~repro.core.measure_scheduler.AdaptiveDepthPolicy`: each
+  driver's effective speculation depth grows beyond ``pipeline_depth`` (up
+  to ``max_depth`` and the backend's ``max_inflight`` hint) while the
+  farm's busy-fraction over a ``depth_window_s`` sliding window sits below
+  ``target_utilization``, and shrinks back when reconciliation lag exceeds
+  its threshold — heterogeneous farms stop idling at depth boundaries.
+  ``stop_policy="entropy"`` watches each driver's mean and per-decision
+  proposal entropy plus its best-latency plateau length
+  (``entropy_threshold`` / ``plateau_patience``), curtails searches whose
+  proposals have converged, and reallocates ``reallocate_fraction`` of the
+  released trials to still-improving drivers that exhaust their own budget
+  — one shared :class:`BudgetLedger` carries the balance across the
+  interleaved session. ``priority`` tags every batch of the session for
+  priority-aware backends (a board farm preempts lower-priority backlog at
+  shard granularity). Adaptive runs stay reproducible given a scripted
+  clock: the depth policy reads only the scheduler's recorded span
+  intervals, never wall-clock (``tools/lint_invariants.py`` enforces
+  this), and curtail/extend decisions fire at a driver's own reconcile
+  points on its own deterministic state.
 - **reporting** — per-workload progress lines plus a session-level
   latency/speedup summary committed to the database. Measure/search
   overlap and the measurement span are *span-accurate*: the scheduler
   records real busy/wait intervals rather than estimating overlap from
-  summed totals (which mis-counts as soon as batches run concurrently).
+  summed totals (which mis-counts as soon as batches run concurrently),
+  and per-driver wait/overlap attribution uses each driver's own wait
+  intervals (``wait_span_s(key=)``), not the global union. Adaptation
+  surfaces as ``TuneResult.depth_trace`` per workload and
+  early-stop/reallocation/preemption counters in ``SessionResult.summary``.
   Fixed-library baselines are measured as one scheduled wave — every
   workload's baseline in flight together — not N serial dispatch round
   trips.
@@ -69,6 +95,111 @@ ModelConfig = Sequence[tuple[int, Workload]]
 
 
 @dataclasses.dataclass
+class BudgetLedger:
+    """Trial budget released by curtailed drivers, available for grants.
+
+    One ledger is shared across an interleaved session: when the stop
+    policy curtails a converged driver, its unspent trials are released
+    here; a still-improving driver that exhausts its own budget draws
+    grants from the balance. ``reallocate_fraction`` caps how much of the
+    released budget may be re-granted (1.0 = all of it; 0.0 = early stop
+    saves every released trial outright, nothing is reallocated).
+    """
+
+    reallocate_fraction: float = 1.0
+    released: int = 0  # trials returned by curtailed drivers
+    granted: int = 0  # trials re-granted to still-improving drivers
+
+    def release(self, n: int) -> None:
+        self.released += max(0, int(n))
+
+    @property
+    def available(self) -> int:
+        cap = int(self.released * self.reallocate_fraction)
+        return max(0, cap - self.granted)
+
+    def draw(self, n: int) -> int:
+        """Grant up to ``n`` trials from the balance; returns the grant."""
+        got = min(max(0, int(n)), self.available)
+        self.granted += got
+        return got
+
+
+class EntropyStopPolicy:
+    """Curtail converged searches, re-grant their budget to improving ones.
+
+    Installed as ``run_scheduled``'s ``on_reconcile`` hook, so it fires at
+    each driver's own reconcile points and reads only that driver's own
+    deterministic state (its live proposal entropies and best-latency
+    plateau length) — decisions therefore replay bit-identically for a
+    fixed seed regardless of completion order, and a curtailed workload's
+    history is a deterministic prefix of its uncurtailed history.
+
+    A driver is **converged** — curtailed, its remaining budget released to
+    the shared :class:`BudgetLedger` — when its mean normalized proposal
+    entropy is at most ``entropy_threshold``, no single decision's entropy
+    exceeds ``max_decision_entropy``, and its best latency has not improved
+    for ``plateau_patience`` consecutive measurements. Calibration note:
+    the proposals are posterior-mean-reward weights
+    (``space.DecisionDistribution``), deliberately soft, so their
+    normalized entropy sits close to 1.0 even late in a search — the
+    default threshold (0.995) therefore reads as "measurably below
+    uniform", the plateau is the workhorse signal, and the entropy gate's
+    job is to keep plateaus that happen *before the proposals have learned
+    anything* (uniform posteriors, e.g. a tiny budget) from stopping the
+    search. ``max_decision_entropy`` defaults to 1.0 (off): decisions late
+    in the mode prefix legitimately carry no evidence and sit at exactly
+    1.0, so tighten it only for flat (non-chained) spaces where "one
+    still-undecided axis" is meaningful. A driver that exhausts
+    its own budget while still **exploring** (plateau shorter than the
+    patience) draws one batch worth of trials per reconcile from the
+    ledger; since converged drivers never draw, released budget flows to
+    the highest-entropy still-improving searches. Requires proposal
+    learning — with it off the entropy signal is empty and the policy
+    never fires.
+    """
+
+    def __init__(self, ledger: BudgetLedger,
+                 entropy_threshold: float = 0.995,
+                 plateau_patience: int = 12,
+                 max_decision_entropy: float = 1.0,
+                 log: Callable[[str], None] | None = None):
+        self.ledger = ledger
+        self.entropy_threshold = float(entropy_threshold)
+        self.plateau_patience = max(1, int(plateau_patience))
+        self.max_decision_entropy = float(max_decision_entropy)
+        self.log = log
+        self.stops = 0  # drivers curtailed
+
+    def __call__(self, key, driver) -> None:
+        if driver.stopped_early:
+            return  # curtailed drivers stay stopped (and never draw)
+        if driver.remaining_trials <= 0:
+            # own budget exhausted: still-improving searches draw a grant
+            if driver.plateau_len < self.plateau_patience:
+                got = self.ledger.draw(driver.batch)
+                if got:
+                    driver.extend_budget(got)
+                    if self.log:
+                        self.log(f"  budget: +{got} trials -> "
+                                 f"{driver.workload.key()} (still improving)")
+            return
+        entropy = driver.proposal_entropy_now()
+        if not entropy:
+            return  # proposal learning off: no convergence signal
+        vals = list(entropy.values())
+        if (sum(vals) / len(vals) <= self.entropy_threshold
+                and max(vals) <= self.max_decision_entropy
+                and driver.plateau_len >= self.plateau_patience):
+            released = driver.curtail()
+            self.ledger.release(released)
+            self.stops += 1
+            if self.log:
+                self.log(f"  budget: stopped {driver.workload.key()} "
+                         f"(converged), released {released} trials")
+
+
+@dataclasses.dataclass
 class WorkloadReport:
     """Per-unique-workload outcome within a session."""
 
@@ -83,6 +214,10 @@ class WorkloadReport:
     # mean normalized proposal entropy at search end (1.0 = uniform,
     # -> 0 = converged; NaN when proposal learning was off)
     proposal_entropy: float = float("nan")
+    # the entropy stop policy curtailed this search before its budget ran
+    # out / trials it was granted from other searches' released budget
+    stopped_early: bool = False
+    budget_granted: int = 0
 
     @property
     def total_latency(self) -> float:
@@ -114,6 +249,13 @@ class SessionResult:
     # per-board utilization / requeue counters when the runner is a board
     # farm (board_farm.BoardFarm.farm_summary); None otherwise
     board_stats: dict | None = None
+    # ---- adaptation observability (PR 8) ----
+    adaptive_depth: bool = False  # depth policy was active
+    stop_policy: str = "none"  # budget policy the session ran under
+    stopped_early: int = 0  # drivers curtailed by the stop policy
+    released_trials: int = 0  # trials returned by curtailed drivers
+    reallocated_trials: int = 0  # released trials re-granted to others
+    preemptions: int = 0  # farm dispatches that jumped lower-priority work
 
     @property
     def overlap_fraction(self) -> float:
@@ -166,6 +308,12 @@ class SessionResult:
             "overlap_fraction": self.overlap_fraction,
             "proposal_entropy": self.mean_proposal_entropy,
             "board_stats": self.board_stats,
+            "adaptive_depth": self.adaptive_depth,
+            "stop_policy": self.stop_policy,
+            "stopped_early": self.stopped_early,
+            "released_trials": self.released_trials,
+            "reallocated_trials": self.reallocated_trials,
+            "preemptions": self.preemptions,
             "workloads": [{
                 "key": r.workload.key(),
                 "count": r.count,
@@ -174,6 +322,8 @@ class SessionResult:
                 "warm_started": r.warm_started,
                 "speedup_vs_fixed": r.speedup_vs_fixed,
                 "proposal_entropy": r.proposal_entropy,
+                "stopped_early": r.stopped_early,
+                "budget_granted": r.budget_granted,
             } for r in self.reports],
         }
 
@@ -240,6 +390,17 @@ class TuningSession:
     from the blended posteriors prior same-op-family searches stored in the
     database; ``pretrain_cost_model`` folds the database's records into
     each search's cost model before its first generation.
+
+    Adaptation knobs (see the module docstring; all off by default, and
+    all apply to the interleaved path — the serial path has nothing to
+    adapt): ``adaptive_depth``/``max_depth``/``target_utilization``/
+    ``depth_window_s`` configure the
+    :class:`~repro.core.measure_scheduler.AdaptiveDepthPolicy`;
+    ``stop_policy="entropy"`` plus ``entropy_threshold``/
+    ``plateau_patience``/``reallocate_fraction`` configure the
+    :class:`EntropyStopPolicy` over a shared :class:`BudgetLedger`
+    (requires ``learn_proposals``); ``priority`` tags every batch for
+    priority-aware backends.
     """
 
     hw: HardwareConfig
@@ -257,6 +418,16 @@ class TuningSession:
     # candidates are never proposed (see core/static_analysis.py); False
     # restores the purely-dynamic pre-analyzer sampler
     static_analysis: bool = True
+    # ---- adaptation (PR 8; all off by default) ----
+    adaptive_depth: bool = False
+    max_depth: int = 8
+    target_utilization: float = 0.75
+    depth_window_s: float = 2.0
+    stop_policy: str = "none"  # "none" | "entropy"
+    entropy_threshold: float = 0.995
+    plateau_patience: int = 12
+    reallocate_fraction: float = 1.0
+    priority: int = 0
     log: Callable[[str], None] | None = None
 
     def _log(self, msg: str) -> None:
@@ -310,7 +481,9 @@ class TuningSession:
             best_latency=res.best_latency, best_schedule=res.best_schedule,
             warm_started=res.warm_started, fixed_latency=fixed,
             wall_time_s=res.wall_time_s,
-            proposal_entropy=res.mean_proposal_entropy)
+            proposal_entropy=res.mean_proposal_entropy,
+            stopped_early=res.stopped_early,
+            budget_granted=res.budget_granted)
 
     # ---- execution paths -------------------------------------------------------
     def _tune_serial(self, unique, budgets,
@@ -331,7 +504,7 @@ class TuningSession:
                 pretrain_cost_model=self.pretrain_cost_model,
                 static_analysis=self.static_analysis))
         return (results, sum(r.overlap_s for r in results),
-                sum(r.measure_time_s for r in results))
+                sum(r.measure_time_s for r in results), {})
 
     def _tune_interleaved(self, unique, budgets, seed, depth,
                           scheduler) -> tuple[list[TuneResult], float, float]:
@@ -343,7 +516,16 @@ class TuningSession:
         given seed regardless of completion order. Session-level overlap
         and measurement span come from the scheduler's real busy/wait
         intervals (span-accurate under concurrency, unlike the old
-        summed-totals estimate)."""
+        summed-totals estimate), with per-driver wait/overlap attribution
+        from each driver's own wait intervals (``wait_span_s(key=)``).
+
+        The adaptation knobs plug in here: the depth policy supplies each
+        driver's effective depth per top-up, the entropy stop policy runs
+        as the reconcile hook over one shared ledger. Both are None/absent
+        by default, leaving the executor bit-identical to the non-adaptive
+        session."""
+        from repro.core.measure_scheduler import AdaptiveDepthPolicy
+
         drivers = [
             tuner.TuneDriver(wl, self.hw, self.runner, trials=trials,
                              seed=seed + i, database=self.database,
@@ -351,14 +533,44 @@ class TuningSession:
                              learn_proposals=self.learn_proposals,
                              prior_distributions=self._priors_for(wl),
                              pretrain_cost_model=self.pretrain_cost_model,
-                             static_analysis=self.static_analysis)
+                             static_analysis=self.static_analysis,
+                             priority=self.priority)
             for i, ((count, wl), trials) in enumerate(zip(unique, budgets))]
-        tuner.run_scheduled(drivers, self.runner, depth, scheduler=scheduler)
+        depth_policy = None
+        # adaptive depth can grow from base depth 1 — that is exactly the
+        # heterogeneous-farm win — but never on a runner with nothing to
+        # overlap (analytic runners stay clamped at depth 1, bit-identical)
+        if self.adaptive_depth and getattr(self.runner, "overlap_capable",
+                                           False):
+            depth_policy = AdaptiveDepthPolicy(
+                depth, max_depth=self.max_depth,
+                target_utilization=self.target_utilization,
+                window_s=self.depth_window_s)
+        ledger = stop = None
+        if self.stop_policy == "entropy":
+            ledger = BudgetLedger(
+                reallocate_fraction=self.reallocate_fraction)
+            stop = EntropyStopPolicy(
+                ledger, entropy_threshold=self.entropy_threshold,
+                plateau_patience=self.plateau_patience, log=self.log)
+        tuner.run_scheduled(drivers, self.runner, depth, scheduler=scheduler,
+                            depth_policy=depth_policy, on_reconcile=stop)
         results = [d.finish(pipeline_depth=depth) for d in drivers]
-        return results, scheduler.overlap_s(), scheduler.measure_span_s()
+        extras = {
+            "adaptive_depth": depth_policy is not None,
+            "stopped_early": stop.stops if stop else 0,
+            "released_trials": ledger.released if ledger else 0,
+            "reallocated_trials": ledger.granted if ledger else 0,
+        }
+        return (results, scheduler.overlap_s(), scheduler.measure_span_s(),
+                extras)
 
     def tune_model(self, ops: ModelConfig, total_trials: int = 256,
                    seed: int = 0, model: str = "") -> SessionResult:
+        if self.stop_policy not in ("none", "entropy"):
+            raise ValueError(
+                f"unknown stop_policy {self.stop_policy!r} "
+                "(expected 'none' or 'entropy')")
         t_start = time.perf_counter()
         ops = list(ops)
         unique = dedup_workloads(ops)
@@ -388,11 +600,13 @@ class TuningSession:
                      if interleave else ""))
 
         if interleave:
-            results, overlap_s, span_s = self._tune_interleaved(
+            results, overlap_s, span_s, extras = self._tune_interleaved(
                 unique, budgets, seed, depth, scheduler)
         else:
-            results, overlap_s, span_s = self._tune_serial(unique, budgets,
-                                                           seed)
+            # adaptation is an interleaved-executor concern: the serial
+            # path has no scheduler to adapt and no shared ledger
+            results, overlap_s, span_s, extras = self._tune_serial(
+                unique, budgets, seed)
         baselines = self._measure_baselines(unique)
         reports = [self._report_for(i, len(unique), count, wl, res, fixed)
                    for i, ((count, wl), res, fixed)
@@ -400,6 +614,7 @@ class TuningSession:
 
         measure_s = sum(r.measure_time_s for r in results)
         summary_fn = getattr(self.runner, "farm_summary", None)
+        board_stats = summary_fn() if callable(summary_fn) else None
         result = SessionResult(
             hw=self.hw, runner_name=self.runner.name, reports=reports,
             total_trials=sum(r.trials for r in reports),
@@ -408,7 +623,13 @@ class TuningSession:
             measure_time_s=measure_s, overlap_s=overlap_s,
             measure_span_s=span_s,
             multi_queue=multi_queue, model=model,
-            board_stats=summary_fn() if callable(summary_fn) else None)
+            board_stats=board_stats,
+            adaptive_depth=extras.get("adaptive_depth", False),
+            stop_policy=self.stop_policy if interleave else "none",
+            stopped_early=extras.get("stopped_early", 0),
+            released_trials=extras.get("released_trials", 0),
+            reallocated_trials=extras.get("reallocated_trials", 0),
+            preemptions=(board_stats or {}).get("preemptions", 0))
         if self.database is not None:
             self.database.add_session(result.summary())
             if self.database.path:

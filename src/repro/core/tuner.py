@@ -112,6 +112,15 @@ class TuneResult:
     # stream bit-identical to the pre-analyzer sampler: candidate sets with
     # nothing to prune are passed through as the original tuple objects.
     static_pruned: int = 0
+    # (submitted-count, effective depth) breakpoints: the speculation depth
+    # this search actually ran at over time. A fixed-depth run has one
+    # entry; an adaptive run shows every grow/shrink the depth policy made.
+    depth_trace: list = dataclasses.field(default_factory=list)
+    # the session's stop policy curtailed this search before its budget ran
+    # out (proposals converged and the best latency plateaued)
+    stopped_early: bool = False
+    # extra trials granted from other drivers' released budget
+    budget_granted: int = 0
 
     @property
     def mean_proposal_entropy(self) -> float:
@@ -139,17 +148,32 @@ class TuneResult:
 
 
 def effective_pipeline_depth(runner: Runner, requested: int) -> int:
-    """Clamp the pipeline depth for runners with nothing to overlap.
+    """Clamp the pipeline depth to what the runner can actually use.
 
     A runner that measures instantaneously and deterministically (e.g. the
     analytic model) gains nothing from speculating against predicted
     latencies — it only degrades search quality — so unless it declares
     ``overlap_capable = True`` the depth is clamped to 1, which keeps the
     pipelined execution bit-identical to the synchronous trajectory.
+
+    An overlap-capable runner that also declares a ``max_inflight``
+    capacity hint (the serial measurement queue and ``MeasurePool``-backed
+    runners report 1; a board farm its board count) is clamped to
+    ``max_inflight + 1`` — one batch per concurrently-progressing slot plus
+    one being evolved against the constant liar. Depth beyond that only
+    parks batches in the backend's queue, deepening speculation on stale
+    predictions with zero extra overlap; the clamp happens once, here, and
+    the depth actually used is what ``TuneResult.pipeline_depth`` reports.
+    Runners without the hint keep the requested depth.
     """
     if requested <= 1:
         return 1
-    return requested if getattr(runner, "overlap_capable", False) else 1
+    if not getattr(runner, "overlap_capable", False):
+        return 1
+    hint = getattr(runner, "max_inflight", None)
+    if hint is None:
+        return requested
+    return min(requested, max(1, int(hint)) + 1)
 
 
 class TuneDriver:
@@ -176,12 +200,18 @@ class TuneDriver:
                  learn_proposals: bool = True,
                  prior_distributions: Mapping[str, Mapping] | None = None,
                  pretrain_cost_model: bool = False,
-                 static_analysis: bool = True):
+                 static_analysis: bool = True,
+                 priority: int = 0):
         self.workload, self.hw, self.runner = workload, hw, runner
         self.trials = trials
         self.batch = batch
         self.database = database
         self.log = log
+        # scheduling priority class: run_scheduled forwards it with every
+        # submit, so this driver's batches preempt lower-priority backlog
+        # on priority-aware backends (results are unaffected — see
+        # measure_scheduler module docstring)
+        self.priority = int(priority)
         # wall-time span of this driver's own activity: first propose() to
         # last reconcile() — in an interleaved session drivers are all
         # constructed up front, so stamping construction time here would
@@ -227,6 +257,13 @@ class TuneDriver:
         self.best_schedule: Schedule | None = None
         self.best_latency = INVALID
         self.warm_started = 0
+        # consecutive measurements since the last best-latency improvement
+        # — the plateau signal the session's entropy stop policy reads
+        self.plateau_len = 0
+        # (submitted-count, depth) breakpoints -> TuneResult.depth_trace
+        self.depth_trace: list[tuple[int, int]] = []
+        self.stopped_early = False  # curtailed by a session stop policy
+        self.budget_granted = 0  # trials granted from released budget
         # pipeline bookkeeping (written by the scheduler loop below)
         self.measure_time_s = 0.0  # runner time across this driver's batches
         self.wait_time_s = 0.0  # main-thread time blocked on this driver
@@ -345,6 +382,8 @@ class TuneDriver:
     def _record(self, s: Schedule, latency: float) -> None:
         self.measured[s.signature()] = latency
         self.history.append((s, latency))
+        self.plateau_len = 0 if latency < self.best_latency \
+            else self.plateau_len + 1
         params = space_lib.concretize(self.workload, self.hw, s)
         if params.valid and math.isfinite(latency):
             self.cost_model.update(features(self.workload, self.hw, params),
@@ -369,6 +408,42 @@ class TuneDriver:
                     self.log(f"  trial {len(self.history):3d}: "
                              f"{latency*1e6:10.1f} us  "
                              f"<- new best {s.as_dict()}")
+
+    # ---- adaptation hooks (depth trace, budget reallocation) -------------------
+    def note_depth(self, depth: int) -> None:
+        """Record the effective speculation depth this driver is being run
+        at; called by the executor on every change (and once at start), so
+        ``TuneResult.depth_trace`` shows the depth over the search."""
+        if not self.depth_trace or self.depth_trace[-1][1] != depth:
+            self.depth_trace.append((self._submitted, depth))
+
+    @property
+    def remaining_trials(self) -> int:
+        """Trials not yet submitted (what a stop policy could release)."""
+        return max(0, self.trials - self._submitted)
+
+    def proposal_entropy_now(self) -> dict[str, float]:
+        """Current per-decision normalized proposal entropy ({} with
+        learning off) — the live convergence signal stop policies read,
+        as opposed to the end-of-search snapshot ``finish()`` reports."""
+        return self.space.proposal_entropy() if self.learn_proposals else {}
+
+    def curtail(self) -> int:
+        """Stop proposing new batches: cap the budget at what has already
+        been submitted (in-flight batches still reconcile normally) and
+        return the number of trials released for reallocation."""
+        released = self.remaining_trials
+        if released:
+            self.trials = self._submitted
+        self.stopped_early = True
+        return released
+
+    def extend_budget(self, extra: int) -> None:
+        """Grant this driver ``extra`` more trials (reallocated from a
+        curtailed driver's released budget)."""
+        if extra > 0:
+            self.trials += int(extra)
+            self.budget_granted += int(extra)
 
     # ---- completion ------------------------------------------------------------
     @property
@@ -401,7 +476,10 @@ class TuneDriver:
             warm_started=self.warm_started, pipeline_depth=pipeline_depth,
             measure_time_s=self.measure_time_s, overlap_s=overlap,
             board_stats=summary() if callable(summary) else None,
-            proposal_entropy=entropy, static_pruned=self.static_pruned)
+            proposal_entropy=entropy, static_pruned=self.static_pruned,
+            depth_trace=list(self.depth_trace),
+            stopped_early=self.stopped_early,
+            budget_granted=self.budget_granted)
 
 
 def timed_run_batch(runner: Runner, driver: TuneDriver,
@@ -417,20 +495,36 @@ def timed_run_batch(runner: Runner, driver: TuneDriver,
 
 def run_scheduled(drivers: Sequence[TuneDriver], runner: Runner,
                   depth: int, multi_queue: bool | None = None,
-                  scheduler: MeasureScheduler | None = None
+                  scheduler: MeasureScheduler | None = None,
+                  depth_policy=None,
+                  on_reconcile: Callable[[int, TuneDriver], None] | None = None
                   ) -> MeasureScheduler:
     """Drive one or many :class:`TuneDriver` state machines against a
     :class:`~repro.core.measure_scheduler.MeasureScheduler`.
 
-    Every driver is topped up to ``depth`` in-flight batches (fixed
-    round-robin fill order), then the next reconcilable batch is collected:
-    per-driver FIFO always, earliest-completed-first across drivers — so on
-    a multi-queue backend (a board farm) a driver whose batch finished
-    early is refilled immediately instead of queueing behind another
-    driver's slower batch, and the backend never starves while any driver
-    has work. A driver's propose/reconcile points depend only on its own
-    reconcile count, so per-driver histories are bit-identical to the
-    single-FIFO schedule for a fixed seed (see the module docstring).
+    Every driver is topped up to its effective depth in-flight batches
+    (fixed round-robin fill order), then the next reconcilable batch is
+    collected: per-driver FIFO always, highest-priority then
+    earliest-completed first across drivers — so on a multi-queue backend
+    (a board farm) a driver whose batch finished early is refilled
+    immediately instead of queueing behind another driver's slower batch,
+    and the backend never starves while any driver has work. A driver's
+    propose/reconcile points depend only on its own reconcile count, so
+    per-driver histories are bit-identical to the single-FIFO schedule for
+    a fixed seed (see the module docstring).
+
+    ``depth_policy`` (an
+    :class:`~repro.core.measure_scheduler.AdaptiveDepthPolicy`, default
+    None = fixed ``depth`` everywhere, bit-identical to the pre-adaptive
+    executor) supplies each driver's effective depth before every top-up
+    and is fed each reconcile's lag afterwards. ``on_reconcile`` (the
+    session's entropy stop policy) runs after every reconcile with the
+    driver — it may curtail the driver or extend its budget; both only
+    change how many batches ``propose()`` will still yield, never the
+    content of batches already proposed. It also runs for any drained
+    driver whose own budget is spent, before each top-up pass, so budget
+    released by other drivers can still reach a driver that exhausted its
+    own *before* the release happened.
 
     Returns the scheduler (already closed) so callers can read its
     span-accurate measure/wait/overlap accounting; each driver's
@@ -446,11 +540,25 @@ def run_scheduled(drivers: Sequence[TuneDriver], runner: Runner,
         while True:
             submitted = False
             for i, driver in enumerate(drivers):
-                while counts[i] < depth:
+                target = depth_policy.depth(i) if depth_policy is not None \
+                    else depth
+                driver.note_depth(target)
+                if (on_reconcile is not None and counts[i] == 0
+                        and driver.remaining_trials <= 0):
+                    # drained with its own budget spent: the hook gets a
+                    # chance to extend it from budget other drivers released
+                    # *after* this driver's last reconcile. Fully drained,
+                    # so any granted batch is proposed with complete
+                    # knowledge of the driver's own history — at depth 1 an
+                    # extended history is exactly the unextended history
+                    # plus extra trailing batches.
+                    on_reconcile(i, driver)
+                while counts[i] < target:
                     batch = driver.propose()
                     if batch is None:
                         break
-                    scheduler.submit(i, driver.workload, batch)
+                    scheduler.submit(i, driver.workload, batch,
+                                     priority=getattr(driver, "priority", 0))
                     counts[i] += 1
                     submitted = True
             if scheduler.inflight():
@@ -460,6 +568,13 @@ def run_scheduled(drivers: Sequence[TuneDriver], runner: Runner,
                 drivers[i].measure_time_s += measure_s
                 drivers[i].reconcile(batch, latencies)
                 counts[i] -= 1
+                if depth_policy is not None:
+                    # lag: this driver's batches still in flight when the
+                    # collected one reconciled (all proposed against the
+                    # constant liar rather than its real latencies)
+                    depth_policy.on_collect(i, scheduler, counts[i])
+                if on_reconcile is not None:
+                    on_reconcile(i, drivers[i])
             elif not submitted:
                 break
     finally:
@@ -488,19 +603,28 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
          learn_proposals: bool = True,
          prior_distributions: Mapping[str, Mapping] | None = None,
          pretrain_cost_model: bool = False,
-         static_analysis: bool = True) -> TuneResult:
+         static_analysis: bool = True,
+         adaptive_depth: bool = False,
+         max_depth: int = 8,
+         priority: int = 0) -> TuneResult:
     """Tune one workload. ``pipeline_depth`` bounds how many proposed batches
     may be in flight at once (1 = fully synchronous; see module docstring for
-    the determinism guarantees of the pipelined mode); the ``learn_*`` /
-    ``prior_distributions`` / ``pretrain_cost_model`` knobs are documented on
-    :class:`TuneDriver`."""
+    the determinism guarantees of the pipelined mode); ``adaptive_depth``
+    lets an :class:`~repro.core.measure_scheduler.AdaptiveDepthPolicy` grow
+    the effective depth up to ``max_depth`` where the backend would
+    otherwise idle (off by default: fixed-seed histories then stay
+    bit-identical to the fixed-depth executor); ``priority`` tags this
+    search's batches for priority-aware backends; the ``learn_*`` /
+    ``prior_distributions`` / ``pretrain_cost_model`` knobs are documented
+    on :class:`TuneDriver`."""
     driver = TuneDriver(workload, hw, runner, trials=trials, seed=seed,
                         database=database, warmup_fraction=warmup_fraction,
                         batch=batch, warm_start=warm_start, log=log,
                         learn_proposals=learn_proposals,
                         prior_distributions=prior_distributions,
                         pretrain_cost_model=pretrain_cost_model,
-                        static_analysis=static_analysis)
+                        static_analysis=static_analysis,
+                        priority=priority)
     depth = effective_pipeline_depth(runner, pipeline_depth)
     if pipeline_depth <= 1:
         while (batch_s := driver.propose()) is not None:
@@ -508,10 +632,15 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
             driver.reconcile(batch_s, latencies)
         driver.wait_time_s = driver.measure_time_s  # nothing overlapped
         driver.overlap_span_s = 0.0
+        driver.note_depth(1)
     else:
         # Even when clamped to depth 1, run through the scheduler so the
         # asynchronous plumbing is exercised (and verified bit-identical).
-        run_scheduled([driver], runner, depth)
+        from repro.core.measure_scheduler import AdaptiveDepthPolicy
+
+        policy = AdaptiveDepthPolicy(depth, max_depth=max_depth) \
+            if adaptive_depth and depth > 1 else None
+        run_scheduled([driver], runner, depth, depth_policy=policy)
         if depth == 1:
             # at depth 1 nothing can overlap; don't let scheduling jitter
             # between submit and collect report as spurious overlap

@@ -22,6 +22,16 @@ makes the hazards structural errors in CI instead of flaky-test archaeology:
                        — iteration order of a set is salted per process,
                        and a dict built in varying order silently reorders
                        the candidate list behind a "deterministic" draw.
+- ``policy-wall-clock`` ANY clock call — including the otherwise-blessed
+                       ``time.monotonic()`` / ``time.perf_counter()`` —
+                       inside a class named ``*Policy`` or ``*Ledger``.
+                       Adaptation policies (scheduler depth, budget
+                       reallocation) must decide from *recorded* span
+                       intervals and per-driver state, never a live clock:
+                       a policy that reads the clock directly cannot be
+                       replayed under a scripted clock, breaking the
+                       adaptive-run reproducibility contract
+                       (see ``core/measure_scheduler.AdaptiveDepthPolicy``).
 
 Escape hatch: append ``# lint: allow(<rule>)`` on the offending line when
 the use is provably safe (e.g. a deliberately wall-clock-stamped log line).
@@ -45,6 +55,14 @@ STDLIB_RANDOM_FNS = {"random", "randint", "randrange", "choice", "choices",
 WALL_CLOCK = {("time", "time"), ("time", "ctime"), ("time", "localtime"),
               ("time", "gmtime"), ("datetime", "now"), ("datetime", "today"),
               ("datetime", "utcnow"), ("date", "today")}
+# all clock reads, including the span-blessed monotonic clocks — none may
+# appear inside *Policy / *Ledger classes (policy-wall-clock rule)
+ANY_CLOCK = WALL_CLOCK | {("time", "monotonic"), ("time", "perf_counter"),
+                          ("time", "monotonic_ns"),
+                          ("time", "perf_counter_ns"),
+                          ("time", "process_time"), ("time", "time_ns")}
+# class-name suffixes whose bodies must be clock-free (adaptation layer)
+_CLOCK_FREE_CLASS_RE = re.compile(r"(Policy|Ledger)$")
 
 _ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([a-z0-9_,\- ]+)\)")
 
@@ -84,9 +102,21 @@ class _Visitor(ast.NodeVisitor):
     def __init__(self, filename: str):
         self.filename = filename
         self.findings: list[tuple[int, str, str]] = []
+        self._class_stack: list[str] = []
 
     def _flag(self, node: ast.AST, rule: str, message: str) -> None:
         self.findings.append((node.lineno, rule, message))
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _in_clock_free_class(self) -> str | None:
+        for name in self._class_stack:
+            if _CLOCK_FREE_CLASS_RE.search(name):
+                return name
+        return None
 
     def visit_Call(self, node: ast.Call) -> None:
         chain = _dotted(node.func)
@@ -115,6 +145,16 @@ class _Visitor(ast.NodeVisitor):
                        f"{joined}() reads calendar time; use "
                        f"time.perf_counter()/time.monotonic() for spans, "
                        f"or pass timestamps in explicitly")
+        # -- policy-wall-clock --
+        if len(chain) >= 2 and (chain[-2], chain[-1]) in ANY_CLOCK:
+            cls = self._in_clock_free_class()
+            if cls is not None:
+                self._flag(node, "policy-wall-clock",
+                           f"{joined}() inside {cls}: adaptation policies "
+                           f"must decide from recorded span intervals "
+                           f"(e.g. MeasureScheduler.busy_fraction), never "
+                           f"a live clock — adaptive runs must replay "
+                           f"under a scripted clock")
         # -- dict-order-rng --
         if isinstance(node.func, ast.Attribute) \
                 and node.func.attr in RNG_DRAW_METHODS \
