@@ -830,6 +830,105 @@ def tuning_cost() -> None:
             f"scheduler smoke: multi-queue diverged on {a.workload.key()}")
 
 
+# ------------------------------------------------- continuous tuning ----
+
+def serve_suite(trials: int = 8) -> None:
+    """Traffic-driven continuous tuning in the serving path (ISSUE 9).
+
+    A real (reduced-config) server starts against an empty tuned artifact:
+    the cold round dispatches every decode workload through the fixed
+    library and records the misses into a TrafficLog; a background
+    ContinuousTuner drains the log, tunes the hottest shapes, and saves
+    the artifact; the hot-swapping global database then flips subsequent
+    rounds' dispatch to tuned provenance — same process, no restart.
+    Asserted: the cold round has zero tuned dispatches, replayed traffic
+    converges to >= 1 tuned dispatch with none left on the fixed library,
+    and an unseen near-miss shape resolves "bucketed" to the nearest tuned
+    bucket. Doubles as the CI serve smoke."""
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.core import (ContinuousTuner, TrafficLog, best_schedule,
+                            reset_global_database)
+    from repro.models.model_zoo import build
+    from repro.runtime.serve_loop import Server, decode_ops
+
+    cfg = get_config("yi_6b").reduced()
+    bundle = build(cfg, remat="none")
+    params = bundle.init(jax.random.key(0))
+    batch_size, prompt, steps = 2, 8, 2
+    ops = decode_ops(cfg, batch_size)
+    total_ops = sum(count for count, _ in ops)
+
+    def mix(d):
+        return " ".join(f"{k}={v}" for k, v in sorted(d.items()))
+
+    old_env = os.environ.get("REPRO_TUNING_DB")
+    tmpdir = tempfile.mkdtemp(prefix="serve_suite_")
+    os.environ["REPRO_TUNING_DB"] = os.path.join(tmpdir, "database.json")
+    reset_global_database()
+    traffic = TrafficLog()
+    tuner = ContinuousTuner(traffic, V5E, runner=AnalyticRunner(V5E),
+                            db_path=os.environ["REPRO_TUNING_DB"],
+                            trials_per_shape=max(trials, 4),
+                            max_shapes_per_cycle=len(ops),
+                            poll_interval_s=0.01)
+    server = Server(bundle, params, max_len=prompt + steps + 1, hw=V5E,
+                    serve_ops=ops, traffic=traffic)
+    batch = bundle.make_batch(
+        0, ShapeSpec("serve", prompt, batch_size, "decode"), train=False)
+    prompts = np.asarray(batch.pop("tokens"))
+    try:
+        cold = server.generate(prompts, steps, extra_batch=batch or None)
+        assert cold.dispatch.get("tuned", 0) == 0, (
+            f"serve: cold server already tuned ({mix(cold.dispatch)}) — "
+            "artifact isolation broken")
+        emit("serve/cold/decode_wall", cold.decode_s * 1e6,
+             mix(cold.dispatch))
+        tuner.start()
+        converged = None
+        for rnd in range(1, 6):
+            assert tuner.wait_idle(timeout=300.0), \
+                "serve: continuous tuner never drained the traffic log"
+            res = server.generate(prompts, steps, extra_batch=batch or None)
+            emit(f"serve/round{rnd}/decode_wall", res.decode_s * 1e6,
+                 mix(res.dispatch))
+            if res.dispatch.get("tuned", 0) >= 1:
+                converged = res
+                break
+        assert converged is not None, (
+            "serve: no tuned dispatch after replayed traffic — the "
+            "serving-tuning loop never closed")
+        assert converged.dispatch.get("fixed", 0) == 0, (
+            f"serve: shapes left on the fixed library after tuning "
+            f"({mix(converged.dispatch)})")
+        emit("serve/converged/tuned_ops",
+             float(converged.dispatch.get("tuned", 0)), f"of {total_ops}")
+        emit("serve/tuner_cycles", float(tuner.cycles),
+             f"shapes={tuner.shapes_tuned}")
+        # an unseen near-miss shape (k doubled on the hottest decode op)
+        # must ride the nearest tuned bucket, not the fixed library
+        b, n, k = ops[0][1].dims
+        near = W.matmul(b, n, 2 * k, ops[0][1].dtype)
+        _, provenance = best_schedule(near, V5E)
+        assert provenance == "bucketed", (
+            f"serve: near-miss shape resolved {provenance!r}, expected "
+            "'bucketed'")
+        emit("serve/near_miss/provenance", 0.0, provenance)
+    finally:
+        tuner.stop()
+        if old_env is None:
+            os.environ.pop("REPRO_TUNING_DB", None)
+        else:
+            os.environ["REPRO_TUNING_DB"] = old_env
+        reset_global_database()
+        shutil.rmtree(tmpdir, ignore_errors=True)
+
+
 SUITES = {
     "space": space_cardinality,
     "static": static_suite,
@@ -842,6 +941,7 @@ SUITES = {
     "transfer": transfer_study,
     "learn": learn_suite,
     "sched": sched_suite,
+    "serve": serve_suite,
 }
 
 _NO_TRIALS_ARG = ("tuning_cost", "space", "static")

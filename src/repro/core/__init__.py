@@ -27,14 +27,17 @@ from repro.core.measure_scheduler import (AdaptiveDepthPolicy,
 from repro.core.board_farm import (Board, BoardDied, BoardFarm, BoardStats,
                                    Fault, FarmDead, LocalBoard,
                                    SimulatedBoard, simulated_farm)
-from repro.core.database import (TuningDatabase, global_database,
-                                 reset_global_database)
+from repro.core.database import (TuningDatabase, default_db_path,
+                                 global_database, reset_global_database)
 from repro.core.tuner import tune, TuneDriver, TuneResult
 from repro.core.session import (BudgetLedger, EntropyStopPolicy,
                                 TuningSession, SessionResult, WorkloadReport,
                                 dedup_workloads, split_budget)
+from repro.core.traffic import (ContinuousTuner, TrafficEntry, TrafficLog,
+                                installed_log, set_traffic_log)
 from repro.core.dispatch import (best_schedule, ensure_tuned,
-                                 fixed_library_schedule, kernel_params)
+                                 fixed_library_schedule,
+                                 invalidate_dispatch_caches, kernel_params)
 
 __all__ = [
     "HardwareConfig", "V5E", "V5E_VMEM32", "V5E_VMEM64", "V5E_MXU256",
@@ -50,10 +53,14 @@ __all__ = [
     "Board", "BoardDied", "BoardFarm", "BoardStats", "Fault", "FarmDead",
     "LocalBoard", "SimulatedBoard", "simulated_farm",
     "run_batch", "xla_latency",
-    "TuningDatabase", "global_database", "reset_global_database",
+    "TuningDatabase", "default_db_path", "global_database",
+    "reset_global_database",
     "tune", "TuneDriver", "TuneResult",
     "BudgetLedger", "EntropyStopPolicy",
     "TuningSession", "SessionResult", "WorkloadReport", "dedup_workloads",
-    "split_budget", "best_schedule", "ensure_tuned",
-    "fixed_library_schedule", "kernel_params",
+    "split_budget",
+    "ContinuousTuner", "TrafficEntry", "TrafficLog", "installed_log",
+    "set_traffic_log",
+    "best_schedule", "ensure_tuned", "fixed_library_schedule",
+    "invalidate_dispatch_caches", "kernel_params",
 ]

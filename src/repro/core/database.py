@@ -39,6 +39,7 @@ import tempfile
 from typing import Any
 
 from repro.core import hardware as hw_lib
+from repro.core import space as space_lib
 from repro.core import static_analysis as static_lib
 from repro.core.schedule import Schedule
 from repro.core.space import DecisionDistribution
@@ -68,6 +69,12 @@ class TuningDatabase:
         # wholesale by load(). Schedules are immutable, so sharing the
         # cached instance across callers is safe.
         self._best_cache: dict[str, tuple[Schedule, float] | None] = {}
+        # memoized nearest_tuned() lookups (dynamic-shape bucketing in the
+        # serving path): (key, hw_name) -> (Schedule, latency, source key)
+        # | None. Any add()/load() can change which bucket is nearest, so
+        # both clear it wholesale.
+        self._bucket_cache: dict[
+            tuple[str, str], tuple[Schedule, float, str] | None] = {}
         if path and os.path.exists(path):
             self.load(path)
 
@@ -103,6 +110,7 @@ class TuningDatabase:
                 return
         bucket.append(entry)
         self._best_cache.pop(key, None)
+        self._bucket_cache.clear()
 
     def add_session(self, summary: dict[str, Any]) -> None:
         """Append one session-level summary (latency/speedup per model).
@@ -136,9 +144,12 @@ class TuningDatabase:
         key = self.record_key(workload, hw_name)
         if key in self._best_cache:
             return self._best_cache[key]
+        # math.isfinite, not "!= inf": json.load accepts -Infinity, and a
+        # -inf latency from a hand-edited or corrupted file would win every
+        # min() forever (load() quarantines these, but records can also be
+        # injected post-load).
         recs = [r for r in self.records.get(key, ())
-                if r["latency_s"] == r["latency_s"]
-                and r["latency_s"] != float("inf")]
+                if math.isfinite(r["latency_s"])]
         if not recs:
             result = None
         else:
@@ -170,8 +181,7 @@ class TuningDatabase:
             if wl_json is None or wl_json.get("op") != workload.op:
                 continue
             finite = [r for r in recs
-                      if r["latency_s"] == r["latency_s"]
-                      and r["latency_s"] != float("inf")]
+                      if math.isfinite(r["latency_s"])]
             # static screen against the source key's own space: a record
             # added after load() (or never loaded) could still be stale,
             # and a stale trace must not warm-start the new search
@@ -194,6 +204,11 @@ class TuningDatabase:
             else:
                 distance = _shape_distance(workload.dims,
                                            tuple(wl_json.get("dims", ())))
+            # rank mismatch -> infinite distance: such schedules can never
+            # concretize on the target and would only pad out the warm-start
+            # limit (mirrors the transfer_distributions skip)
+            if math.isinf(distance):
+                continue
             best = min(finite, key=lambda r: r["latency_s"])
             scored.append((distance, best["latency_s"], key, best))
         scored.sort(key=lambda t: t[:3])
@@ -257,6 +272,56 @@ class TuningDatabase:
                     tgt[v] = tgt.get(v, 0.0) + source_w * score
         return out
 
+    def nearest_tuned(self, workload: Workload, hw: "hw_lib.HardwareConfig",
+                      ) -> tuple[Schedule, float, str] | None:
+        """Nearest tuned *bucket* for an unseen serving shape — the best
+        record of the closest same-op shape on the same hardware whose
+        schedule concretizes valid on the actual workload.
+
+        This is the serving-path sibling of :meth:`transfer_candidates`:
+        where transfer seeds a *search* (any hardware, tuner re-validates),
+        bucketing must hand back a schedule that is correct to run *right
+        now*, so it is same-hardware only, skips infinite (cross-rank)
+        distances, and concretizes each candidate on the actual shape before
+        returning it — a bucket that doesn't concretize falls through to the
+        next-nearest, and a total miss returns None (dispatch then drops to
+        the fixed library). Results are memoized per (workload, hardware)
+        and invalidated by add()/load(), so hot serving dispatch stays O(1).
+        """
+        exact_key = self.record_key(workload, hw.name)
+        cache_key = (exact_key, hw.name)
+        if cache_key in self._bucket_cache:
+            return self._bucket_cache[cache_key]
+        scored: list[tuple[float, float, str, dict]] = []
+        for key, recs in self.records.items():
+            if key == exact_key or not key.endswith("@" + hw.name):
+                continue
+            wl_json = self.workloads.get(key)
+            if wl_json is None or wl_json.get("op") != workload.op:
+                continue
+            finite = [r for r in recs if math.isfinite(r["latency_s"])]
+            if not finite:
+                continue
+            distance = _shape_distance(workload.dims,
+                                       tuple(wl_json.get("dims", ())))
+            if math.isinf(distance):
+                continue
+            best = min(finite, key=lambda r: r["latency_s"])
+            scored.append((distance, best["latency_s"], key, best))
+        scored.sort(key=lambda t: t[:3])
+        result = None
+        for distance, latency, key, rec in scored:
+            schedule = Schedule.from_json(rec["schedule"])
+            try:
+                valid = space_lib.concretize(workload, hw, schedule).valid
+            except Exception:
+                valid = False
+            if valid:
+                result = (schedule, latency, key)
+                break
+        self._bucket_cache[cache_key] = result
+        return result
+
     def __len__(self):
         return sum(len(v) for v in self.records.values())
 
@@ -292,7 +357,30 @@ class TuningDatabase:
         self.distributions = payload.get("dist", {})  # optional: v2 payloads
         self.quarantined = payload.get("quarantine", {})
         self._best_cache.clear()
+        self._bucket_cache.clear()
+        self._sanitize_latencies()
         self._verify_records()
+
+    def _sanitize_latencies(self) -> None:
+        """Quarantine loaded records with non-finite or non-numeric
+        latencies. ``save`` never writes them (strict JSON), but
+        ``json.load`` happily parses ``Infinity``/``-Infinity``/``NaN``
+        from a hand-edited file — and a ``-inf`` latency would win every
+        best() min() forever if it reached the query paths."""
+        for key in list(self.records):
+            kept: list[dict] = []
+            bad: list[dict] = []
+            for rec in self.records[key]:
+                lat = rec.get("latency_s")
+                if isinstance(lat, (int, float)) and math.isfinite(lat):
+                    kept.append(rec)
+                else:
+                    bad.append({"record": rec,
+                                "reason": f"non-finite latency: {lat!r}"})
+            if bad:
+                self.records[key] = kept
+                self.quarantined.setdefault(key, []).extend(bad)
+                self.stale_quarantined += len(bad)
 
     # ---- static screening ----------------------------------------------------
     def _static_report_for_key(self, key: str):
@@ -341,6 +429,7 @@ class TuningDatabase:
                 self.quarantined.setdefault(key, []).extend(bad)
                 self.stale_quarantined += len(bad)
                 self._best_cache.pop(key, None)
+                self._bucket_cache.clear()
 
 
 def _json_sanitize(x: Any) -> Any:
@@ -363,9 +452,14 @@ def _shape_distance(a: tuple[int, ...], b: tuple[int, ...]) -> float:
 
 
 _GLOBAL: TuningDatabase | None = None
+# (st_mtime_ns, st_size) of the artifact at the time _GLOBAL last read it,
+# or None when the file was absent — the hot-swap generation check.
+_GLOBAL_STAT: tuple[int, int] | None = None
 
 
-def _default_db_path() -> str:
+def default_db_path() -> str:
+    """The resolved process-wide artifact path: REPRO_TUNING_DB when set,
+    else the repo's ``tuned/database.json``."""
     return os.path.abspath(
         os.environ.get("REPRO_TUNING_DB",
                        os.path.join(os.path.dirname(__file__),
@@ -373,23 +467,55 @@ def _default_db_path() -> str:
                                     "database.json")))
 
 
+def _artifact_stat(path: str) -> tuple[int, int] | None:
+    try:
+        st = os.stat(path)
+    except OSError:
+        return None
+    return (st.st_mtime_ns, st.st_size)
+
+
 def global_database() -> TuningDatabase:
     """Process-wide database; path overridable via REPRO_TUNING_DB.
 
-    The env var is re-resolved on *every* call: repointing REPRO_TUNING_DB
-    at a new tuned artifact (serving reload, tests) takes effect on the next
-    lookup instead of being pinned to the first value seen. The instance is
-    cached per resolved path, so steady-state calls stay cheap."""
-    global _GLOBAL
-    path = _default_db_path()
+    Both the env var and the artifact file itself are re-resolved on *every*
+    call. Repointing REPRO_TUNING_DB at a new tuned artifact (serving
+    reload, tests) takes effect on the next lookup instead of being pinned
+    to the first value seen; a database file that appears or changes on disk
+    *after* the first call — a tuning run saving mid-process, a
+    :class:`~repro.core.traffic.ContinuousTuner` shipping a new artifact —
+    is detected by (mtime, size) and reloaded **in place**, so a running
+    server hot-swaps to the new records without a restart and without
+    anyone calling :func:`reset_global_database`. While the file is
+    unchanged the same instance is returned (its memoized best/bucket
+    caches intact), so steady-state dispatch costs one ``os.stat``."""
+    global _GLOBAL, _GLOBAL_STAT
+    path = default_db_path()
+    stat = _artifact_stat(path)
     if _GLOBAL is None or _GLOBAL.path != path:
-        _GLOBAL = TuningDatabase(path if os.path.exists(path) else None)
+        _GLOBAL = TuningDatabase(path if stat is not None else None)
         _GLOBAL.path = path
+        _GLOBAL_STAT = stat
+    elif stat != _GLOBAL_STAT:
+        if stat is not None:
+            # appeared or changed: reload in place (load() drops the best/
+            # bucket caches) so holders of the instance see the new records
+            _GLOBAL.load(path)
+        else:
+            # artifact deleted out from under us: fall back to empty
+            _GLOBAL = TuningDatabase()
+            _GLOBAL.path = path
+        _GLOBAL_STAT = stat
     return _GLOBAL
 
 
 def reset_global_database() -> None:
     """Drop the cached process-wide database; the next ``global_database()``
-    call re-reads the file from disk (tests / serving artifact reload)."""
-    global _GLOBAL
+    call re-reads the file from disk (tests / serving artifact reload).
+    Also drops the dispatch-layer schedule caches so no stale schedule
+    stays reachable through the old chain."""
+    global _GLOBAL, _GLOBAL_STAT
     _GLOBAL = None
+    _GLOBAL_STAT = None
+    from repro.core import dispatch  # local: dispatch imports this module
+    dispatch.invalidate_dispatch_caches()

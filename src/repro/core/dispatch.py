@@ -1,24 +1,48 @@
 """Framework-wide schedule dispatch — the technique as a first-class feature.
 
-Every tensor op in the framework resolves its kernel schedule through this
-chain (mirroring how a TVM deployment uses its tuning log):
+Every tensor op in the framework resolves its kernel schedule through a
+four-rung chain (mirroring how a TVM deployment uses its tuning log):
 
-  1. tuned   — best record in the tuning database for (workload, hardware);
-  2. fixed   — the hand-written library default (the muRISCV-NN analogue);
-  3. None    — fall back to XLA's own lowering of the jnp op (the
-               compiler-autovectorization analogue).
+  1. tuned    — best record in the tuning database for the exact
+                (workload, hardware) key;
+  2. bucketed — the nearest tuned *bucket*: the best record of the closest
+                same-op shape on the same hardware whose schedule
+                concretizes valid on the actual shape
+                (:meth:`TuningDatabase.nearest_tuned`). Dynamic-shape
+                serving traffic — an unseen sequence length, an odd batch —
+                rides the neighbouring tuned schedule instead of falling
+                straight back to the fixed library;
+  3. fixed    — the hand-written library default (the muRISCV-NN analogue);
+  4. None     — fall back to XLA's own lowering of the jnp op (the
+                compiler-autovectorization analogue).
+
+Dispatch is also the sensor of the serving↔tuning loop
+(``core/traffic.py``): every resolution that does *not* hit rung 1 is a
+cache miss or near miss, and its workload shape is recorded into a
+:class:`~repro.core.traffic.TrafficLog` (the explicit ``traffic=``
+argument, else the process-wide log installed via
+:func:`~repro.core.traffic.set_traffic_log`). A
+:class:`~repro.core.traffic.ContinuousTuner` drains that log in the
+background and ships new records into the database, which
+``global_database()`` hot-swaps into running servers by mtime. With no log
+installed (the default) recording is off and dispatch has zero
+tuning-side effects.
 
 Dispatch is on the serving hot path (every op instance of every request
-resolves through it), so both rungs are memoized per
+resolves through it), so every rung is memoized per
 ``(workload.key(), hw.name)``: tuned lookups through the per-key cache on
-``TuningDatabase.best`` (invalidated by ``add``/``load``), fixed-library
-schedules through a module-level cache here (they are a pure function of
-workload and hardware). Per-call dispatch is O(1) under serving traffic.
+``TuningDatabase.best`` and bucketed lookups through
+``TuningDatabase.nearest_tuned``'s cache (both invalidated by
+``add``/``load``), fixed-library schedules through a module-level cache
+here (they are a pure function of workload and hardware) that
+:func:`invalidate_dispatch_caches` — called by ``reset_global_database`` —
+drops. Per-call dispatch is O(1) under serving traffic.
 """
 
 from __future__ import annotations
 
 from repro.core import space as space_lib
+from repro.core import traffic as traffic_lib
 from repro.core.database import TuningDatabase, global_database
 from repro.core.hardware import HardwareConfig, V5E
 from repro.core.schedule import Schedule
@@ -88,22 +112,61 @@ def _fixed_library_schedule(workload: Workload,
     return Schedule.fixed(**choices)
 
 
+def invalidate_dispatch_caches() -> None:
+    """Drop the module-level fixed-library schedule cache. The tuned and
+    bucketed rungs are cached on the :class:`TuningDatabase` instance and
+    invalidated by its own ``add``/``load``; this drops the one cache that
+    outlives database instances, so after ``reset_global_database()`` no
+    stale schedule stays reachable through the old chain."""
+    _FIXED_CACHE.clear()
+
+
+def _record_miss(traffic, workload: Workload, hw: HardwareConfig,
+                 provenance: str, count: int) -> None:
+    log = traffic if traffic is not None else traffic_lib.installed_log()
+    if log is not None:
+        log.record(workload, hw.name, provenance, count=count)
+
+
 def best_schedule(workload: Workload, hw: HardwareConfig = V5E,
                   database: TuningDatabase | None = None,
-                  allow_fixed: bool = True) -> tuple[Schedule | None, str]:
-    """Resolve (schedule, provenance) for an op instance."""
+                  allow_fixed: bool = True, allow_bucketed: bool = True,
+                  traffic=None, count: int = 1) -> tuple[Schedule | None,
+                                                         str]:
+    """Resolve (schedule, provenance) for an op instance.
+
+    ``provenance`` is one of ``"tuned"`` / ``"bucketed"`` / ``"fixed"`` /
+    ``"xla"`` — the rung that resolved (module docstring). Every
+    non-``"tuned"`` resolution is recorded as a miss into ``traffic`` (or
+    the process-wide installed log; neither present = recording off);
+    ``count`` is the op's multiplicity in the caller's step (e.g. layer
+    count), so the traffic log's hit counters reflect real demand."""
     db = database if database is not None else global_database()
     rec = db.best(workload, hw.name)
     if rec is not None:
         return rec[0], "tuned"
+    if allow_bucketed:
+        bucket = db.nearest_tuned(workload, hw)
+        if bucket is not None:
+            # a near miss: served from the neighbouring bucket, but still
+            # worth tuning exactly — record it so the tuner closes the gap
+            _record_miss(traffic, workload, hw, "bucketed", count)
+            return bucket[0], "bucketed"
     if allow_fixed:
+        _record_miss(traffic, workload, hw, "fixed", count)
         return fixed_library_schedule(workload, hw), "fixed"
+    _record_miss(traffic, workload, hw, "xla", count)
     return None, "xla"
 
 
 def kernel_params(workload: Workload, hw: HardwareConfig = V5E,
-                  database: TuningDatabase | None = None):
-    sched, provenance = best_schedule(workload, hw, database)
+                  database: TuningDatabase | None = None,
+                  allow_fixed: bool = True, allow_bucketed: bool = True,
+                  traffic=None, count: int = 1):
+    sched, provenance = best_schedule(workload, hw, database,
+                                      allow_fixed=allow_fixed,
+                                      allow_bucketed=allow_bucketed,
+                                      traffic=traffic, count=count)
     if sched is None:
         return None, provenance
     return space_lib.concretize(workload, hw, sched), provenance

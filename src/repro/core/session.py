@@ -73,6 +73,15 @@ across runs. A :class:`TuningSession` closes that gap:
   Fixed-library baselines are measured as one scheduled wave — every
   workload's baseline in flight together — not N serial dispatch round
   trips.
+
+Sessions are also the engine of **traffic-driven continuous tuning**
+(``core/traffic.py``): a :class:`~repro.core.traffic.ContinuousTuner`
+cycle is exactly one ``tune_model`` call whose op list is the drained
+traffic-log entries with their hit counts as multiplicities — the same
+``count * flops`` budget split that weights a static network by layer
+count weights a live serving process by observed demand — and whose
+database save is what the hot-swapping ``global_database()`` picks up in
+running servers.
 """
 
 from __future__ import annotations

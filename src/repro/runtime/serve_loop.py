@@ -1,4 +1,16 @@
-"""Batched serving loop: prefill + decode with a static KV budget."""
+"""Batched serving loop: prefill + decode with a static KV budget.
+
+This is also where the dispatch chain meets real traffic: a Server built
+with a hardware config and a per-decode-step op list (:func:`decode_ops`)
+resolves each step's tensor workloads through
+``repro.core.dispatch.best_schedule`` — tuned → bucketed → fixed → xla —
+and reports the provenance mix on every :class:`GenerationResult`. Misses
+flow into the attached :class:`~repro.core.traffic.TrafficLog`, which a
+:class:`~repro.core.traffic.ContinuousTuner` drains in the background; the
+hot-swapping ``global_database()`` then flips later dispatches to
+``"tuned"`` without a server restart. Built without a hardware config (the
+default), the server is the plain pre-dispatch serving loop.
+"""
 
 from __future__ import annotations
 
@@ -9,31 +21,92 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.workload import Workload, gemv, matmul
 from repro.models.model_zoo import ModelBundle
 
 
 @dataclasses.dataclass
 class GenerationResult:
-    tokens: np.ndarray  # (B, prompt + generated)
+    tokens: np.ndarray  # (B, prompt + n_steps) — exactly n_steps generated
     prefill_s: float
     decode_s: float
     steps: int
+    # provenance -> op count of this step's dispatch resolution
+    # ("tuned"/"bucketed"/"fixed"/"xla"); None when the server was built
+    # without a dispatch layer (hw=None)
+    dispatch: dict[str, int] | None = None
+
+
+def decode_ops(cfg, batch: int) -> list[tuple[int, Workload]]:
+    """The per-decode-step tensor workloads of an ArchConfig, as
+    ``[(count, Workload), ...]`` at the benchmarks/nets.py granularity (one
+    entry per projection family, repeat counts for the layer stack).
+
+    ``batch == 1`` lowers the projections to ``gemv`` — the single-stream
+    edge-decode shape the paper tunes — larger batches to skinny matmuls.
+    This is what a dispatch-aware :class:`Server` resolves every step, and
+    what :func:`repro.core.dispatch.ensure_tuned` pre-tunes offline.
+    """
+    dtype = cfg.dtype if cfg.dtype in ("float32", "bfloat16") else "bfloat16"
+
+    def proj(n: int, k: int) -> Workload:
+        return (gemv(n, k, dtype) if batch == 1
+                else matmul(batch, n, k, dtype))
+
+    ff = cfg.moe_d_ff if (cfg.family == "moe" and cfg.moe_d_ff) else cfg.d_ff
+    n_up = 2 if cfg.act == "silu" else 1  # gated acts: up + gate projections
+    return [
+        (cfg.n_layers, proj(cfg.q_dim + 2 * cfg.kv_dim, cfg.d_model)),  # QKV
+        (cfg.n_layers, proj(cfg.d_model, cfg.q_dim)),      # attention out
+        (n_up * cfg.n_layers, proj(ff, cfg.d_model)),      # FFN up (+ gate)
+        (cfg.n_layers, proj(cfg.d_model, ff)),             # FFN down
+        (1, proj(cfg.padded_vocab, cfg.d_model)),          # LM head
+    ]
 
 
 class Server:
     """Minimal batched server: a fixed batch of requests is prefetched,
     prefilled once, then decoded greedily step-by-step (one jitted decode
-    step reused across positions — the serve_step the dry-run lowers)."""
+    step reused across positions — the serve_step the dry-run lowers).
 
-    def __init__(self, bundle: ModelBundle, params, max_len: int = 256):
+    ``hw`` + ``serve_ops`` attach the dispatch layer: every ``generate``
+    resolves each serve op through the four-rung chain against ``database``
+    (default: the hot-swapping ``global_database()``) and records misses
+    into ``traffic`` — the serving side of the continuous-tuning loop."""
+
+    def __init__(self, bundle: ModelBundle, params, max_len: int = 256,
+                 hw=None, serve_ops=None, traffic=None, database=None):
         self.bundle = bundle
         self.params = params
         self.max_len = max_len
+        self.hw = hw
+        self.serve_ops = list(serve_ops or ())
+        self.traffic = traffic
+        self.database = database
         self._decode = jax.jit(
             lambda p, c, t, pos: bundle.decode_fn(p, c, t, pos))
 
+    def resolve_dispatch(self) -> dict[str, int] | None:
+        """One dispatch pass over the serve ops: provenance -> op count.
+        None when no dispatch layer is attached. Each pass re-resolves
+        through the database (hot-swap visible); per-op cost is O(1) via
+        the dispatch caches."""
+        if self.hw is None or not self.serve_ops:
+            return None
+        from repro.core.dispatch import best_schedule  # lazy: jax-free core
+
+        counts: dict[str, int] = {}
+        for count, wl in self.serve_ops:
+            _, provenance = best_schedule(wl, self.hw,
+                                          database=self.database,
+                                          traffic=self.traffic,
+                                          count=count)
+            counts[provenance] = counts.get(provenance, 0) + count
+        return counts
+
     def generate(self, prompts: np.ndarray, n_steps: int,
                  extra_batch: dict | None = None) -> GenerationResult:
+        dispatch = self.resolve_dispatch()
         b, s = prompts.shape
         batch = {"tokens": jnp.asarray(prompts)}
         if extra_batch:
@@ -46,7 +119,10 @@ class Server:
         jax.block_until_ready(next_tok)
         prefill_s = time.perf_counter() - t0
 
-        out = [np.asarray(next_tok)]
+        # the prefill argmax is the *first* generated token, so it counts
+        # against n_steps: n_steps=0 emits nothing (tokens == prompts) and
+        # the result always has exactly prompt + n_steps columns
+        out = [np.asarray(next_tok)] if n_steps > 0 else []
         t0 = time.perf_counter()
         for i in range(n_steps - 1):
             pos = jnp.int32(s + i)
@@ -57,6 +133,7 @@ class Server:
         jax.block_until_ready(next_tok)
         decode_s = time.perf_counter() - t0
 
-        gen = np.stack(out, axis=1)
+        gen = (np.stack(out, axis=1) if out
+               else np.zeros((b, 0), dtype=prompts.dtype))
         return GenerationResult(np.concatenate([prompts, gen], axis=1),
-                                prefill_s, decode_s, n_steps)
+                                prefill_s, decode_s, n_steps, dispatch)

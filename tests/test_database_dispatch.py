@@ -1,5 +1,6 @@
-"""Database bugfixes (env re-resolution, atomic save, strict JSON, inf
-rejection) and the serving-path dispatch cache with invalidation."""
+"""Database bugfixes (env re-resolution, hot-swap reload, atomic save,
+strict JSON, non-finite latency rejection) and the serving-path dispatch
+cache with invalidation."""
 
 import json
 import os
@@ -63,6 +64,34 @@ def test_reset_global_database_rereads_disk(tmp_path, monkeypatch,
     assert global_database().best(wl, V5E.name)[1] == 5e-4
 
 
+def test_global_database_loads_file_created_after_first_call(tmp_path,
+                                                             monkeypatch,
+                                                             fresh_global):
+    """A tuning run saving its artifact mid-process must become visible to
+    dispatch: the instance used to be pinned to 'no file' forever."""
+    wl = W.matmul(64, 64, 64)
+    p = tmp_path / "db.json"
+    monkeypatch.setenv("REPRO_TUNING_DB", str(p))
+    assert global_database().best(wl, V5E.name) is None  # no file yet
+    _make_db_file(p, wl, "mxu_min", 1e-3)  # appears after the first call
+    assert global_database().best(wl, V5E.name)[1] == 1e-3
+
+
+def test_global_database_hot_swaps_on_mtime_change(tmp_path, monkeypatch,
+                                                   fresh_global):
+    """A changed artifact reloads *in place*: callers holding the instance
+    (a running server) see the new records without any reset call."""
+    wl = W.matmul(64, 64, 64)
+    p = tmp_path / "db.json"
+    _make_db_file(p, wl, "mxu_min", 1e-3)
+    monkeypatch.setenv("REPRO_TUNING_DB", str(p))
+    db = global_database()
+    assert db.best(wl, V5E.name)[1] == 1e-3
+    _make_db_file(p, wl, "mxu_min", 5e-4)  # tuner ships a better artifact
+    assert global_database() is db  # same instance, reloaded in place
+    assert db.best(wl, V5E.name)[1] == 5e-4
+
+
 # ----------------------------------------------------------- persistence ----
 
 def test_add_rejects_nonfinite_latency():
@@ -96,6 +125,81 @@ def test_add_session_sanitizes_nonfinite_to_strict_json(tmp_path):
     assert payload["sessions"][0]["speedup_vs_fixed"] is None
     assert payload["sessions"][0]["workloads"][0]["best_latency_s"] is None
     assert payload["sessions"][0]["wall_time_s"] == 1.5
+
+
+# ------------------------------------------------- non-finite latencies ----
+
+def test_best_skips_negative_infinity():
+    """-inf passed the old `!= inf` filter and won every min() forever."""
+    db = TuningDatabase()
+    wl = W.matmul(64, 64, 64)
+    db.add(wl, V5E.name, Schedule.fixed(variant="good"), 1e-3, "analytic")
+    # add() rejects non-finite, so corruption is injected directly — the
+    # shape a hand-edited or hostile loaded payload takes
+    key = db.record_key(wl, V5E.name)
+    db.records[key].append({"schedule": Schedule.fixed(variant="evil")
+                            .to_json(),
+                            "latency_s": float("-inf"), "runner": "r"})
+    db._best_cache.clear()
+    sched, latency = db.best(wl, V5E.name)
+    assert sched["variant"] == "good" and latency == 1e-3
+
+
+def test_transfer_candidates_skip_negative_infinity():
+    db = TuningDatabase()
+    query = W.matmul(64, 64, 64)
+    other = W.matmul(64, 64, 128)  # same op family, near shape
+    good = Schedule.fixed(variant="mxu_min")
+    # statically valid decisions, so only the finite filter can stop it
+    evil = Schedule.fixed(variant="mxu_min", m_scale=0.25, n_scale=1.0,
+                          k_scale=1.0, order="mnk", accumulate=True)
+    db.add(other, V5E.name, good, 1e-3, "analytic")
+    key = db.record_key(other, V5E.name)
+    db.records[key].append({"schedule": evil.to_json(),
+                            "latency_s": float("-inf"), "runner": "r"})
+    out = db.transfer_candidates(query, V5E.name)
+    assert [s.signature() for s in out] == [good.signature()]
+
+
+def test_load_quarantines_nonfinite_latencies(tmp_path):
+    """json.load parses -Infinity, so a hand-edited artifact could smuggle
+    a record that wins every best() — load() must quarantine it."""
+    wl = W.matmul(64, 64, 64)
+    key = TuningDatabase.record_key(wl, V5E.name)
+    payload = {
+        "records": {key: [
+            {"schedule": Schedule.fixed(variant="mxu_min").to_json(),
+             "latency_s": 1e-3, "runner": "analytic"},
+            {"schedule": Schedule.fixed(variant="mxu_min").to_json(),
+             "latency_s": float("-inf"), "runner": "analytic"},
+            {"schedule": Schedule.fixed(variant="mxu_min").to_json(),
+             "latency_s": float("nan"), "runner": "analytic"},
+        ]},
+        "workloads": {key: wl.to_json()},
+    }
+    p = tmp_path / "edited.json"
+    with open(p, "w") as f:
+        json.dump(payload, f)  # default allow_nan: writes -Infinity/NaN
+    db = TuningDatabase(str(p))
+    assert db.best(wl, V5E.name)[1] == 1e-3
+    reasons = [q["reason"] for q in db.quarantined[key]]
+    assert sum("non-finite latency" in r for r in reasons) == 2
+
+
+def test_transfer_candidates_skip_cross_rank_records():
+    """Rank-mismatched (infinite-distance) same-op records can never
+    concretize on the target; transfer must skip them like
+    transfer_distributions does, not pad the warm-start list."""
+    query = W.matmul(64, 64, 64)
+    db = TuningDatabase()
+    # a corrupt same-op entry whose dims lost a rank (hand-edited file)
+    bad_key = "matmul-64x64-corrupt@" + V5E.name
+    db.workloads[bad_key] = {"op": "matmul", "dims": [64, 64],
+                             "dtype": "float32"}
+    db.records[bad_key] = [{"schedule":
+                            Schedule.fixed(variant="mxu_min").to_json(),
+                            "latency_s": 1e-3, "runner": "r"}]
+    assert db.transfer_candidates(query, V5E.name) == []
 
 
 # --------------------------------------------------------- dispatch cache ----

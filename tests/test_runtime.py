@@ -252,6 +252,15 @@ def test_server_generates_consistent_with_forward():
                                         fromlist=["ShapeSpec"])
                           .ShapeSpec("p", 8, 2, "decode"),
                           train=False)["tokens"])
+
+    # n_steps must be exact: generate(0) used to emit the prefill argmax
+    # anyway, returning prompt+1 columns while reporting steps=0
+    out0 = server.generate(prompts, n_steps=0)
+    assert out0.tokens.shape == prompts.shape and out0.steps == 0
+    np.testing.assert_array_equal(out0.tokens, prompts)
+    out1 = server.generate(prompts, n_steps=1)
+    assert out1.tokens.shape == (2, 9) and out1.steps == 1
+
     out = server.generate(prompts, n_steps=6)
     assert out.tokens.shape == (2, 14)
     # greedy decode must match greedy over the full forward logits
