@@ -729,11 +729,19 @@ def session_report(db: TuningDatabase) -> list[tuple[str, float, str]]:
                              f"/preempt={s.get('preemptions', 0)}")
             else:
                 adapt_txt = "stops=n/a"
+            # build-cache hit rate of the session's kernel builds (n/a for
+            # summaries recorded before the content-addressed cache, or
+            # for build-free analytic sessions that never probed it)
+            bc = s.get("build_cache")
+            probes = (bc.get("hits", 0) + bc.get("misses", 0)
+                      if isinstance(bc, dict) else 0)
+            bc_txt = f"{bc['hits'] / probes:.2f}" if probes else "n/a"
             rows.append((f"report/{model}/session{i}", tuned * 1e6,
                          f"{trend} speedup_vs_fixed={speedup_txt} "
                          f"overlap={overlap_txt} "
                          f"entropy={entropy_txt} "
                          f"{adapt_txt} "
+                         f"build_cache_hit={bc_txt} "
                          f"trials={s.get('total_trials', '?')}"))
             prev_latency = tuned
             best_latency = min(best_latency, tuned)
@@ -929,6 +937,118 @@ def serve_suite(trials: int = 8) -> None:
         shutil.rmtree(tmpdir, ignore_errors=True)
 
 
+# ------------------------------------------- content-addressed caching ----
+
+def cache_suite(trials: int = 16) -> None:
+    """Content-addressed build/measurement caching (ISSUE 10).
+
+    Three measurements, two of them asserted:
+
+    1. duplicate-concretization rate — how often a tuning search asks for
+       a (workload, hw, trace) lowering the memoized ``concretize`` has
+       already derived (static screen, runner, record paths all re-touch
+       the same trace);
+    2. warm-vs-cold interpret build wall — a second identical batch on the
+       :class:`InterpretRunner` must perform **zero** Pallas builds and
+       finish **>= 2x** faster (asserted), since trace+lower+first-run
+       dominates cold batch wall;
+    3. serve-loop steady state — a ``build_kernels=True`` server's first
+       dispatch pass pays the builds; every later generate must perform
+       **zero** builds (asserted).
+    """
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.core import (build_cache_stats, clear_build_cache,
+                            clear_concretize_cache, concretize_cache_stats,
+                            reset_global_database)
+    from repro.models.model_zoo import build
+    from repro.runtime.serve_loop import Server, decode_ops
+
+    # 1. duplicate-concretization rate under a real analytic search
+    for wl in (W.matmul(512, 512, 512, "bfloat16"),
+               W.gemv(2048, 2048, "bfloat16")):
+        clear_concretize_cache()
+        tune(wl, V5E, AnalyticRunner(V5E), trials=trials, seed=0)
+        s = concretize_cache_stats()
+        rate = s["hits"] / max(s["hits"] + s["misses"], 1)
+        emit(f"cache/concretize/{wl.op}/dup_rate_pct", rate * 100,
+             f"hits={s['hits']} misses={s['misses']}")
+
+    # 2. warm-vs-cold build wall on the interpret runner
+    wl = W.matmul(128, 128, 128, "float32")
+    schedules = _candidate_population(wl, INTERPRET, limit=4)
+    runner = InterpretRunner(INTERPRET, repeats=1, warmup=0)
+    clear_build_cache()
+    before = build_cache_stats()
+    t0 = time.perf_counter()
+    runner.run_batch(wl, schedules)
+    cold = time.perf_counter() - t0
+    mid = build_cache_stats()
+    t0 = time.perf_counter()
+    runner.run_batch(wl, schedules)
+    warm = time.perf_counter() - t0
+    after = build_cache_stats()
+    assert after["misses"] == mid["misses"], (
+        f"cache: warm batch rebuilt "
+        f"({after['misses'] - mid['misses']} builds)")
+    speedup = cold / max(warm, 1e-9)
+    assert speedup >= 2.0, (
+        f"cache: warm batch only {speedup:.2f}x faster than cold — the "
+        "build cache is not absorbing trace+lower+first-run")
+    emit("cache/interpret/cold_batch_wall", cold * 1e6,
+         f"builds={mid['misses'] - before['misses']}")
+    emit("cache/interpret/warm_batch_wall", warm * 1e6,
+         f"speedup={speedup:.2f}x hits={after['hits'] - mid['hits']}")
+
+    # 3. serve loop: first dispatch pass builds, steady state never does
+    cfg = get_config("yi_6b").reduced()
+    bundle = build(cfg, remat="none")
+    params = bundle.init(jax.random.key(0))
+    batch_size, prompt, steps = 2, 8, 2
+    ops = decode_ops(cfg, batch_size)
+
+    old_env = os.environ.get("REPRO_TUNING_DB")
+    tmpdir = tempfile.mkdtemp(prefix="cache_suite_")
+    os.environ["REPRO_TUNING_DB"] = os.path.join(tmpdir, "database.json")
+    reset_global_database()
+    server = Server(bundle, params, max_len=prompt + steps + 1, hw=INTERPRET,
+                    serve_ops=ops, build_kernels=True)
+    batch = bundle.make_batch(
+        0, ShapeSpec("serve", prompt, batch_size, "decode"), train=False)
+    prompts = np.asarray(batch.pop("tokens"))
+    try:
+        clear_build_cache()
+        cold_stats = build_cache_stats()
+        res = server.generate(prompts, steps, extra_batch=batch or None)
+        mid = build_cache_stats()
+        first_builds = mid["misses"] - cold_stats["misses"]
+        assert first_builds > 0, (
+            "cache: first dispatch pass built nothing — build_kernels is "
+            "not reaching the kernel builder")
+        emit("cache/serve/first_pass_decode_wall", res.decode_s * 1e6,
+             f"builds={first_builds}")
+        res = server.generate(prompts, steps, extra_batch=batch or None)
+        after = build_cache_stats()
+        steady = after["misses"] - mid["misses"]
+        assert steady == 0, (
+            f"cache: steady-state serve performed {steady} builds — the "
+            "dispatch pass is not content-addressed")
+        emit("cache/serve/steady_state_builds", float(steady),
+             f"hits={after['hits'] - mid['hits']}")
+    finally:
+        if old_env is None:
+            os.environ.pop("REPRO_TUNING_DB", None)
+        else:
+            os.environ["REPRO_TUNING_DB"] = old_env
+        reset_global_database()
+        shutil.rmtree(tmpdir, ignore_errors=True)
+
+
 SUITES = {
     "space": space_cardinality,
     "static": static_suite,
@@ -942,6 +1062,7 @@ SUITES = {
     "learn": learn_suite,
     "sched": sched_suite,
     "serve": serve_suite,
+    "cache": cache_suite,
 }
 
 _NO_TRIALS_ARG = ("tuning_cost", "space", "static")

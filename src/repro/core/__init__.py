@@ -10,9 +10,12 @@ from repro.core.hardware import (HardwareConfig, V5E, V5E_VMEM32, V5E_VMEM64,
 from repro.core.workload import (Workload, matmul, qmatmul, gemv, vmacc,
                                  attention)
 from repro.core.schedule import Schedule, Decision
-from repro.core.space import (space_for, concretize, DecisionDistribution,
+from repro.core.space import (space_for, concretize, concretize_cache_stats,
+                              clear_concretize_cache, DecisionDistribution,
                               KernelParams, SpaceProgram, flat_space_v1,
                               tile_candidates, v1_distinct_configs)
+from repro.core.build_cache import (BuildCache, build_cache_stats,
+                                    clear_build_cache, global_build_cache)
 from repro.core.sampler import TraceSampler
 from repro.core.static_analysis import (Diagnostic, SpaceReport, analyze,
                                         lint_space, pruned_program)
@@ -43,6 +46,9 @@ __all__ = [
     "HardwareConfig", "V5E", "V5E_VMEM32", "V5E_VMEM64", "V5E_MXU256",
     "INTERPRET", "SWEEP", "Workload", "matmul", "qmatmul", "gemv", "vmacc",
     "attention", "Schedule", "Decision", "space_for", "concretize",
+    "concretize_cache_stats", "clear_concretize_cache",
+    "BuildCache", "build_cache_stats", "clear_build_cache",
+    "global_build_cache",
     "DecisionDistribution", "KernelParams", "SpaceProgram", "flat_space_v1",
     "tile_candidates", "v1_distinct_configs", "TraceSampler",
     "Diagnostic", "SpaceReport", "analyze", "lint_space", "pruned_program",

@@ -59,6 +59,7 @@ from collections import deque
 from typing import Any, Callable, Sequence
 
 from repro.core import static_analysis as static_lib
+from repro.core.build_cache import build_cache_stats
 from repro.core.hardware import HardwareConfig
 from repro.core.measure_scheduler import MeasureTicket
 from repro.core.runner import INVALID
@@ -324,12 +325,20 @@ class _FarmTicket(MeasureTicket):
         super().__init__(workload, schedules)
         self.results: list[float | None] = [None] * len(self.schedules)
         self.remaining = len(self.schedules)
+        # dedup fan-out: representative idx -> follower idxs that submitted
+        # the same schedule signature and reuse its latency (farm dedup=True)
+        self.aliases: dict[int, list[int]] = {}
 
     def _settle(self, idx: int, latency: float) -> bool:
-        """Record one candidate's latency; True when the batch completed."""
-        if self.results[idx] is None:
-            self.results[idx] = latency
-            self.remaining -= 1
+        """Record one candidate's latency — and its dedup followers', when
+        the farm collapsed same-signature candidates at submission; True
+        when the batch completed. A follower settles with whatever its
+        representative finally got, including ``INVALID`` after the
+        representative exhausted its requeue retries."""
+        for i in (idx, *self.aliases.get(idx, ())):
+            if self.results[i] is None:
+                self.results[i] = latency
+                self.remaining -= 1
         if self.remaining == 0 and not self.done():
             self._complete([lat if lat is not None else INVALID
                             for lat in self.results])
@@ -389,6 +398,11 @@ class BoardFarm:
       FIFO (the determinism baseline), and in all cases a candidate's
       *latency* is unaffected — priorities reorder completion, never
       results;
+    - **dedup** (``dedup=True``, off by default) — same-signature
+      candidates within a submitted batch collapse onto one
+      representative; followers never occupy a board slot and settle off
+      the representative's latency — through requeues and retry
+      exhaustion alike — counted in ``farm_summary()['dedup_reused']``;
     - **requeue** — candidates of a dead/abandoned board go back on the
       queue for the survivors — including candidates the board held for
       several different batches — at most ``max_retries`` times each, then
@@ -417,7 +431,7 @@ class BoardFarm:
     def __init__(self, boards: Sequence[Board], hw: HardwareConfig | None = None,
                  name: str = "farm", max_retries: int = 2,
                  straggler_timeout_s: float = 60.0, max_respawns: int = 1,
-                 aging_every: int = 4):
+                 aging_every: int = 4, dedup: bool = False):
         boards = list(boards)
         if not boards:
             raise ValueError("a BoardFarm needs at least one board")
@@ -432,6 +446,11 @@ class BoardFarm:
         # bypass rounds per +1 effective priority for a jumped candidate
         # (the anti-starvation aging credit)
         self.aging_every = max(1, int(aging_every))
+        # collapse same-signature candidates within a submitted batch:
+        # measure each distinct signature once, fan the latency out by
+        # submission position. Off by default — reusing a measurement for
+        # a duplicate is a semantic choice on noisy boards.
+        self.dedup = bool(dedup)
         self._respawns_left = {b.name: max(0, int(max_respawns))
                                for b in boards}
         # farm-level counters, cumulative across batches
@@ -440,6 +459,7 @@ class BoardFarm:
         self.retry_exhausted = 0  # candidates INVALID after max_retries
         self.garbage_sanitized = 0  # non-physical latencies mapped to INVALID
         self.static_rejected = 0  # candidates refused before dispatch
+        self.dedup_reused = 0  # candidates settled off a same-signature rep
         self._wall_s = 0.0  # accumulated active span (work in the system)
         self._span_t0: float | None = None  # start of the current active span
         self._tokens = itertools.count()
@@ -507,6 +527,23 @@ class BoardFarm:
                 ticket._settle(idx, INVALID)
             if ticket.done():  # everything refused: never touches the farm
                 return ticket
+        skip = set(rejected)
+        if self.dedup:
+            # same-signature candidates collapse onto the first (the
+            # representative); followers never become work items and settle
+            # off whatever the representative's latency turns out to be —
+            # the fan-out lives in _FarmTicket._settle, so it survives
+            # requeue-from-dead (the representative's _WorkItem keeps the
+            # ticket/idx through any number of board deaths).
+            first: dict = {}
+            for i, s in enumerate(ticket.schedules):
+                if i in skip:
+                    continue
+                r = first.setdefault(s.signature(), i)
+                if r != i:
+                    ticket.aliases.setdefault(r, []).append(i)
+                    skip.add(i)
+                    self.dedup_reused += 1
         with self._mu:
             if self._closed:
                 ticket._fail(RuntimeError(f"farm {self.name} is closed"))
@@ -517,7 +554,7 @@ class BoardFarm:
             self._work.extend(
                 _WorkItem(ticket, i, workload, s, priority=int(priority))
                 for i, s in enumerate(ticket.schedules)
-                if i not in rejected)
+                if i not in skip)
             self._ensure_dispatcher()
         self._done.put(_WAKE)
         return ticket
@@ -762,6 +799,8 @@ class BoardFarm:
             "invalid_after_retries": self.retry_exhausted,
             "garbage_sanitized": self.garbage_sanitized,
             "static_rejected": self.static_rejected,
+            "dedup_reused": self.dedup_reused,
+            "build_cache": build_cache_stats(),
             "measure_wall_s": wall,
         }
 

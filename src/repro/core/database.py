@@ -21,6 +21,13 @@ records, closest shape first, into ``{decision: {value: weight}}`` priors a
 new search seeds its program with (Fig. 4 transfer upgraded from warm-start
 traces to warm-start distributions).
 
+The database doubles as a **cross-session re-measure memo**
+(:meth:`TuningDatabase.measured_latency`): lookups keyed by (record key,
+schedule signature) let a tuning session reuse the stored latency of a
+concretization it already measured in an earlier session — at equal
+fidelity only (same runner name) — instead of paying the build + run
+again. Off by default at the consumer (``tune(reuse_measured=...)``).
+
 Incoming data is **statically screened** (``core/static_analysis.py``):
 ``load`` verifies every record against the feasible table of its own
 (workload, hardware) space and quarantines stale ones — values no longer in
@@ -75,6 +82,13 @@ class TuningDatabase:
         # both clear it wholesale.
         self._bucket_cache: dict[
             tuple[str, str], tuple[Schedule, float, str] | None] = {}
+        # signature-keyed measured-latency index (cross-session re-measure
+        # memo): (record key, schedule signature) -> {runner: min latency}.
+        # Built lazily by measured_latency(), invalidated to None on add()/
+        # load()/quarantine like the bucket cache.
+        self._measured_index: dict[
+            tuple[str, tuple], dict[str, float]] | None = None
+        self.measured_memo = 0  # measured_latency() hits
         if path and os.path.exists(path):
             self.load(path)
 
@@ -111,6 +125,7 @@ class TuningDatabase:
         bucket.append(entry)
         self._best_cache.pop(key, None)
         self._bucket_cache.clear()
+        self._measured_index = None
 
     def add_session(self, summary: dict[str, Any]) -> None:
         """Append one session-level summary (latency/speedup per model).
@@ -160,6 +175,50 @@ class TuningDatabase:
 
     def history(self, workload: Workload, hw_name: str) -> list[dict]:
         return list(self.records.get(self.record_key(workload, hw_name), ()))
+
+    def measured_latency(self, workload: Workload, hw_name: str,
+                         schedule: Schedule,
+                         runner_name: str | None = None) -> float | None:
+        """Cross-session re-measure memo: the best recorded latency for this
+        exact concretization — keyed by (record key, schedule signature) —
+        or None if the database has never measured it.
+
+        ``runner_name`` restricts the lookup to records measured by a runner
+        of the same name, so a memo hit is always at *equal* fidelity
+        (an analytic estimate must never stand in for a board measurement);
+        ``None`` accepts any runner's record (callers who don't care, e.g.
+        reporting). The index is built lazily from the full record set and
+        invalidated by :meth:`add`/:meth:`load`/quarantine exactly like the
+        bucket cache; hits count in :attr:`measured_memo`."""
+        if self._measured_index is None:
+            index: dict[tuple[str, tuple], dict[str, float]] = {}
+            for key, recs in self.records.items():
+                for r in recs:
+                    lat = r.get("latency_s")
+                    if not isinstance(lat, (int, float)) \
+                            or not math.isfinite(lat):
+                        continue
+                    try:
+                        sig = Schedule.from_json(r["schedule"]).signature()
+                    except Exception:
+                        continue  # malformed record: no memo entry
+                    per_runner = index.setdefault((key, sig), {})
+                    runner = r.get("runner", "")
+                    if lat < per_runner.get(runner, math.inf):
+                        per_runner[runner] = lat
+            self._measured_index = index
+        ikey = (self.record_key(workload, hw_name), schedule.signature())
+        per_runner = self._measured_index.get(ikey)
+        if not per_runner:
+            return None
+        if runner_name is None:
+            lat = min(per_runner.values())
+        else:
+            lat = per_runner.get(runner_name)
+            if lat is None:
+                return None
+        self.measured_memo += 1
+        return lat
 
     def transfer_candidates(self, workload: Workload, hw_name: str,
                             limit: int = 4) -> list[Schedule]:
@@ -358,6 +417,7 @@ class TuningDatabase:
         self.quarantined = payload.get("quarantine", {})
         self._best_cache.clear()
         self._bucket_cache.clear()
+        self._measured_index = None
         self._sanitize_latencies()
         self._verify_records()
 
@@ -430,6 +490,7 @@ class TuningDatabase:
                 self.stale_quarantined += len(bad)
                 self._best_cache.pop(key, None)
                 self._bucket_cache.clear()
+                self._measured_index = None
 
 
 def _json_sanitize(x: Any) -> Any:

@@ -37,6 +37,19 @@ resolves through it), so every rung is memoized per
 here (they are a pure function of workload and hardware) that
 :func:`invalidate_dispatch_caches` — called by ``reset_global_database`` —
 drops. Per-call dispatch is O(1) under serving traffic.
+
+Below the chain sits the content-addressed layer (``core/build_cache.py``):
+whatever rung resolves, :func:`kernel_params` concretizes through the
+memoized ``space.concretize`` (keyed by workload key / hardware name /
+schedule signature), and any subsequent ``kernels.build`` of the resulting
+params is served from the process-wide :class:`BuildCache` keyed by
+``params.signature()`` — so a server rebuilding its dispatch chain after a
+database hot-swap reuses every kernel whose concrete lowering didn't
+change. Those caches are value-keyed and never go stale on a database
+swap, so ``invalidate_dispatch_caches`` deliberately leaves them alone.
+Measurement-side batch dedup (the ``dedup`` knob on
+``InterpretRunner``/``SubprocessRunner``/``BoardFarm``) is the tuning-path
+sibling of the same signature key — off by default, see ``runner.py``.
 """
 
 from __future__ import annotations

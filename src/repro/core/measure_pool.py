@@ -415,6 +415,16 @@ class SubprocessRunner:
     candidate (reported ``INVALID``) and one worker respawn. ``workers=0``
     picks ``min(cpu_count, 4)``. Call :meth:`close` (or use as a context
     manager) to release the workers.
+
+    Because workers are persistent spawn processes, module state survives
+    across tasks: each worker's process-wide
+    :class:`~repro.core.build_cache.BuildCache` warms up once per distinct
+    kernel signature and serves every later candidate that concretizes to
+    it — no parent-side plumbing needed. With ``dedup=True``, same-signature
+    candidates within a batch are additionally collapsed *before* dispatch:
+    each distinct signature is measured once and its latency fanned out by
+    submission position. Off by default — reusing a measured latency for a
+    duplicate is a semantic choice on a noisy runner (see ``runner.py``).
     """
 
     hw: HardwareConfig
@@ -423,6 +433,7 @@ class SubprocessRunner:
     workers: int = 0
     timeout_s: float = 60.0
     mp_context: str = "spawn"
+    dedup: bool = False
     name: str = "subprocess"
     # See tuner.py: runners with real measurement latency opt into the
     # pipelined (speculative) tuner loop.
@@ -461,16 +472,25 @@ class SubprocessRunner:
 
     def run_batch(self, workload: Workload,
                   schedules: Sequence[Schedule]) -> list[float]:
+        schedules = list(schedules)
+        n = len(schedules)
+        rep = list(range(n))
+        if self.dedup:
+            first: dict = {}
+            for i, s in enumerate(schedules):
+                rep[i] = first.setdefault(s.signature(), i)
+        distinct = [i for i in range(n) if rep[i] == i]
         pool = self._ensure_pool()
-        payloads = [(self.hw, workload, s, self.repeats, self.warmup)
-                    for s in schedules]
-        out = []
-        for o in pool.run_many(payloads):
+        payloads = [(self.hw, workload, schedules[i], self.repeats,
+                     self.warmup) for i in distinct]
+        latencies = [INVALID] * n
+        for i, o in zip(distinct, pool.run_many(payloads)):
             if o.ok and isinstance(o.value, (int, float)):
-                out.append(float(o.value))
-            else:
-                out.append(INVALID)
-        return out
+                latencies[i] = float(o.value)
+        for i in range(n):
+            if rep[i] != i:
+                latencies[i] = latencies[rep[i]]
+        return latencies
 
     def close(self) -> None:
         if self._pool is not None:

@@ -60,6 +60,14 @@ validate come back ``INVALID`` from a screened ticket without occupying the
 measurement thread or a board (``static_rejected`` counts them). Backends
 that screen natively (``BoardFarm.static_screens``) are left to do it
 themselves so rejections are counted exactly once.
+
+Caching and dedup live *below* this layer: the content-addressed build
+cache (``core/build_cache.py``) and the per-batch signature dedup knobs
+belong to the backends (``InterpretRunner``/``SubprocessRunner``/
+``BoardFarm``), which always fulfil tickets position-aligned with the
+submitted schedules — so the scheduler's per-submitter FIFO reconciliation
+and determinism contract are untouched by whether a backend measured every
+candidate or fanned a representative's latency out to duplicates.
 """
 
 from __future__ import annotations

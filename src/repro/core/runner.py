@@ -53,12 +53,47 @@ taken at the requested depth. Backends that additionally declare
 ``supports_priority`` accept ``submit_batch(..., priority=)`` and serve
 higher-priority batches first (see ``measure_scheduler.py``); the hint is
 purely about *capacity* and is unaffected by priorities.
+
+Caching and dedup (the content-addressed layer)
+-----------------------------------------------
+Candidate evaluation is layered over two value-keyed caches plus an
+optional batch-level dedup, all anchored on content signatures
+(``Schedule.signature()`` for traces, ``KernelParams.signature()`` for
+concrete lowerings — never object identity):
+
+- ``space.concretize`` is memoized per (workload key, hardware name,
+  schedule signature) in a bounded process-wide LRU — pure derivation,
+  always on, semantically invisible. :class:`AnalyticRunner` and the
+  static analyzer ride the same memo, so the analytic fast path stops
+  re-deriving identical params. Invalidated only by
+  ``space.clear_concretize_cache()`` (tests that monkeypatch the variant
+  registry).
+- ``kernels.build`` is backed by the process-wide
+  :class:`~repro.core.build_cache.BuildCache`, keyed by
+  ``(params.signature(), interpret)``. :meth:`InterpretRunner._prepare`
+  additionally skips its first-run validation on a cache hit (the cached
+  callable already survived one), so a repeated signature costs neither
+  the lower nor the validation run. Also always on: the build is a pure
+  function of the key, so results — and fixed-seed tuning histories —
+  are bit-identical with the cache enabled. Invalidated only by
+  ``build_cache.clear_build_cache()``.
+- **Batch-level measurement dedup** is a ``dedup`` knob (default False)
+  on :class:`InterpretRunner`, :class:`AnalyticRunner`,
+  :class:`~repro.core.measure_pool.SubprocessRunner`, and
+  :class:`~repro.core.board_farm.BoardFarm`: same-signature candidates
+  within one batch measure once and the latency fans out by submission
+  position. This *is* a semantic choice on noisy runners (position i
+  reports position j's sample instead of its own draw), hence off by
+  default there; on the deterministic :class:`AnalyticRunner` dedup-on is
+  provably identical to dedup-off (hypothesis-tested), making it pure
+  saving.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
+import queue
 import threading
 import time
 from typing import Callable, Protocol, Sequence
@@ -122,6 +157,11 @@ class InterpretRunner:
     # *timing* stays serial so measurements never contend for the host.
     max_workers: int = 0  # 0 -> min(cpu_count, 8)
     build_timeout_s: float = 60.0
+    # Measure each distinct trace signature in a batch once and fan the
+    # latency out by submission position. Off by default: on a noisy
+    # wall-clock runner, reusing a latency sample is a semantic choice
+    # (see the module docstring).
+    dedup: bool = False
     # Real wall-clock measurement: the tuner may pipeline search behind it.
     overlap_capable = True
     # One measurement host: submitted batches progress one at a time.
@@ -131,15 +171,22 @@ class InterpretRunner:
                  schedule: Schedule) -> Callable | None:
         """Build + validate one candidate; ``None`` if it is invalid or its
         Pallas build/first-run crashes (failure stays isolated to this
-        candidate)."""
+        candidate). Builds are served from the process-wide
+        :class:`~repro.core.build_cache.BuildCache`; a cached callable
+        already survived its first-run validation, so a hit skips that
+        run too — the expensive phase disappears entirely for repeated
+        signatures."""
         from repro import kernels  # lazy: avoid import cycle
+        from repro.core.build_cache import global_build_cache
 
         params = space_lib.concretize(workload, self.hw, schedule)
         if not params.valid:
             return None
+        already_built = (params.signature(), True) in global_build_cache()
         try:
             fn = kernels.build(workload, params, interpret=True)
-            fn(*workload.example_inputs()).block_until_ready()
+            if not already_built:
+                fn(*workload.example_inputs()).block_until_ready()
         except Exception:
             return None
         return fn
@@ -164,44 +211,71 @@ class InterpretRunner:
                   schedules: Sequence[Schedule]) -> list[float]:
         """Build the batch concurrently, then time survivors serially.
 
-        A *crashing* build costs only its own slot. A *hung* build cannot be
-        killed from a thread: it forfeits itself plus whatever its held
-        worker slot starves once the batch deadline — ``build_timeout_s``
-        per concurrency wave, not per candidate, so stalls never accumulate
-        unboundedly — expires. Workers are daemon threads, so a wedged build
-        can never block interpreter exit either. When wedged builds are a
-        real risk, use :class:`~repro.core.measure_pool.SubprocessRunner`
-        instead: its process-pool workers give a true per-candidate timeout
-        *kill* (the slot is reclaimed immediately, not abandoned).
+        At most ``workers`` threads are created, pulling candidate indices
+        from a shared queue — thread creation is bounded by the pool size,
+        not the batch size (a farm-scale batch used to spawn one thread
+        per candidate up front). With ``dedup`` on, only the first
+        occurrence of each trace signature is built and timed; duplicates
+        receive its latency by position.
+
+        A *crashing* build costs only its own slot. A *hung* build cannot
+        be killed from a thread: it wedges its worker (and the one queue
+        item it held) until the batch deadline — ``build_timeout_s`` per
+        concurrency wave, not per candidate, so stalls never accumulate
+        unboundedly — expires; the remaining workers keep draining the
+        queue. Workers are daemon threads, so a wedged build can never
+        block interpreter exit either. When wedged builds are a real
+        risk, use :class:`~repro.core.measure_pool.SubprocessRunner`
+        instead: its process-pool workers give a true per-candidate
+        timeout *kill* (the slot is reclaimed immediately, not abandoned).
         """
         schedules = list(schedules)
         if len(schedules) <= 1:
             return [self.run(workload, s) for s in schedules]
         n = len(schedules)
-        workers = self.max_workers or min(n, os.cpu_count() or 1, 8)
-        slots = threading.Semaphore(workers)
+        # position -> first position carrying the same trace signature
+        rep = list(range(n))
+        if self.dedup:
+            first: dict = {}
+            for i, s in enumerate(schedules):
+                rep[i] = first.setdefault(s.signature(), i)
+        distinct = [i for i in range(n) if rep[i] == i]
+        workers = self.max_workers or min(len(distinct),
+                                          os.cpu_count() or 1, 8)
+        workers = max(1, min(workers, len(distinct)))
         results: list[Callable | None] = [None] * n
         finished = [threading.Event() for _ in range(n)]
+        pending: queue.SimpleQueue = queue.SimpleQueue()
+        for i in distinct:
+            pending.put(i)
 
-        def build(i: int, s: Schedule) -> None:
-            with slots:
+        def worker() -> None:
+            while True:
                 try:
-                    results[i] = self._prepare(workload, s)
+                    i = pending.get_nowait()
+                except queue.Empty:
+                    return
+                try:
+                    results[i] = self._prepare(workload, schedules[i])
                 finally:
                     finished[i].set()
 
-        for i, s in enumerate(schedules):
-            threading.Thread(target=build, args=(i, s), daemon=True).start()
-        waves = -(-n // workers)  # ceil: full-queue passes over the slots
+        for _ in range(workers):
+            threading.Thread(target=worker, daemon=True).start()
+        # ceil: full-queue passes over the pool
+        waves = -(-len(distinct) // workers)
         deadline = time.monotonic() + self.build_timeout_s * waves
-        fns: list[Callable | None] = []
-        for i in range(n):
+        inputs = workload.example_inputs()
+        latencies = [INVALID] * n
+        for i in distinct:
             ok = finished[i].wait(timeout=max(0.0,
                                               deadline - time.monotonic()))
-            fns.append(results[i] if ok else None)
-        inputs = workload.example_inputs()
-        return [INVALID if fn is None else self._measure(fn, inputs)
-                for fn in fns]
+            if ok and results[i] is not None:
+                latencies[i] = self._measure(results[i], inputs)
+        for i in range(n):
+            if rep[i] != i:
+                latencies[i] = latencies[rep[i]]
+        return latencies
 
 
 @dataclasses.dataclass
@@ -210,6 +284,11 @@ class AnalyticRunner:
 
     hw: HardwareConfig
     name: str = "analytic"
+    # Evaluate each distinct trace signature in a batch once. The model is
+    # a deterministic function of the concretized params, so dedup-on is
+    # provably identical to dedup-off (hypothesis-tested) — still off by
+    # default to keep one uniform contract across runners.
+    dedup: bool = False
     # Instantaneous measurement: nothing for the tuner pipeline to hide
     # behind, so speculative search would only degrade quality (tuner.py
     # clamps the pipeline depth to 1 for this runner).
@@ -217,13 +296,24 @@ class AnalyticRunner:
     max_inflight = 1
 
     def run(self, workload: Workload, schedule: Schedule) -> float:
+        # concretize is memoized process-wide (see the module docstring),
+        # so repeated evaluations of one signature skip the re-derivation.
         params = space_lib.concretize(workload, self.hw, schedule)
         return self.latency(workload, params)
 
     def run_batch(self, workload: Workload,
                   schedules: Sequence[Schedule]) -> list[float]:
         # The model is deterministic: the batch is exactly the serial path.
-        return [self.run(workload, s) for s in schedules]
+        if not self.dedup:
+            return [self.run(workload, s) for s in schedules]
+        memo: dict = {}
+        out = []
+        for s in schedules:
+            sig = s.signature()
+            if sig not in memo:
+                memo[sig] = self.run(workload, s)
+            out.append(memo[sig])
+        return out
 
     def latency(self, workload: Workload,
                 params: space_lib.KernelParams) -> float:

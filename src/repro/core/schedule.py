@@ -118,6 +118,15 @@ class Schedule:
 
     # ---- identity / io --------------------------------------------------------
     def signature(self) -> tuple:
+        """The trace's content key: the ordered (name, choice) pairs,
+        ignoring version, provenance, and candidate sets. This is the
+        identity every dedup layer keys on — the tuner's in-flight sets,
+        the database's record dedup and cross-session measured-latency
+        memo, the batch dedup knobs on runners and the board farm, and
+        (one concretization later, as ``KernelParams.signature()``) the
+        build cache. Value-derived by construction — never ``id()`` or a
+        default ``repr`` (``tools/lint_invariants.py`` enforces this for
+        new cache keys in ``core/``)."""
         return tuple((d.name, d.choice) for d in self.decisions)
 
     def __hash__(self):

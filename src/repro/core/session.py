@@ -92,6 +92,7 @@ import time
 from typing import Callable, Sequence
 
 from repro.core import tuner
+from repro.core.build_cache import build_cache_stats, stats_delta
 from repro.core.database import TuningDatabase
 from repro.core.hardware import HardwareConfig
 from repro.core.measure_scheduler import MeasureScheduler
@@ -265,6 +266,12 @@ class SessionResult:
     released_trials: int = 0  # trials returned by curtailed drivers
     reallocated_trials: int = 0  # released trials re-granted to others
     preemptions: int = 0  # farm dispatches that jumped lower-priority work
+    # process-wide build-cache counter deltas over this session (see
+    # core/build_cache.py); None when never snapshotted (old payloads)
+    build_cache: dict | None = None
+    # trials settled from the database's cross-session measured-latency
+    # memo across all workloads (reuse_measured=True only)
+    measured_memo: int = 0
 
     @property
     def overlap_fraction(self) -> float:
@@ -323,6 +330,8 @@ class SessionResult:
             "released_trials": self.released_trials,
             "reallocated_trials": self.reallocated_trials,
             "preemptions": self.preemptions,
+            "build_cache": self.build_cache,
+            "measured_memo": self.measured_memo,
             "workloads": [{
                 "key": r.workload.key(),
                 "count": r.count,
@@ -437,6 +446,11 @@ class TuningSession:
     plateau_patience: int = 12
     reallocate_fraction: float = 1.0
     priority: int = 0
+    # settle candidates the database already measured (same runner name)
+    # from the stored latency instead of re-measuring — the cross-session
+    # memo (database.measured_latency). Off by default: reuse changes
+    # which candidates receive fresh measurements.
+    reuse_measured: bool = False
     log: Callable[[str], None] | None = None
 
     def _log(self, msg: str) -> None:
@@ -511,7 +525,8 @@ class TuningSession:
                 learn_proposals=self.learn_proposals,
                 prior_distributions=self._priors_for(wl),
                 pretrain_cost_model=self.pretrain_cost_model,
-                static_analysis=self.static_analysis))
+                static_analysis=self.static_analysis,
+                reuse_measured=self.reuse_measured))
         return (results, sum(r.overlap_s for r in results),
                 sum(r.measure_time_s for r in results), {})
 
@@ -543,7 +558,8 @@ class TuningSession:
                              prior_distributions=self._priors_for(wl),
                              pretrain_cost_model=self.pretrain_cost_model,
                              static_analysis=self.static_analysis,
-                             priority=self.priority)
+                             priority=self.priority,
+                             reuse_measured=self.reuse_measured)
             for i, ((count, wl), trials) in enumerate(zip(unique, budgets))]
         depth_policy = None
         # adaptive depth can grow from base depth 1 — that is exactly the
@@ -581,6 +597,7 @@ class TuningSession:
                 f"unknown stop_policy {self.stop_policy!r} "
                 "(expected 'none' or 'entropy')")
         t_start = time.perf_counter()
+        bc_before = build_cache_stats()
         ops = list(ops)
         unique = dedup_workloads(ops)
         weights = [count * wl.flops() for count, wl in unique]
@@ -638,7 +655,9 @@ class TuningSession:
             stopped_early=extras.get("stopped_early", 0),
             released_trials=extras.get("released_trials", 0),
             reallocated_trials=extras.get("reallocated_trials", 0),
-            preemptions=(board_stats or {}).get("preemptions", 0))
+            preemptions=(board_stats or {}).get("preemptions", 0),
+            build_cache=stats_delta(build_cache_stats(), bc_before),
+            measured_memo=sum(r.measured_memo for r in results))
         if self.database is not None:
             self.database.add_session(result.summary())
             if self.database.path:

@@ -66,8 +66,10 @@ dynamic pipeline would have rejected anyway.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
+import threading
 from typing import Any, Callable, Iterator, Mapping
 
 from repro.core import intrinsics
@@ -106,6 +108,24 @@ class KernelParams:
     vmem_bytes: int
     valid: bool
     why_invalid: str = ""
+
+    def signature(self) -> tuple:
+        """Canonical content key of this concrete kernel instantiation.
+
+        Covers exactly the values a kernel build consumes — op, shapes,
+        block/grid/order, accumulate and dtypes — so two schedules that
+        concretize to the same lowering share one signature, whatever
+        trace produced them. Purely value-derived (never ``id()`` or a
+        default ``repr``): equal params on different objects, processes,
+        or sessions hash and compare equal, which is what makes the
+        signature usable as a content-addressed cache key across the
+        build cache, batch dedup, and the database's measured-latency
+        memo. The hardware config is *not* part of the signature (params
+        already encode its consequences); layers whose results do depend
+        on the hardware beyond the params — e.g. the ``concretize`` memo
+        — add ``hw.name`` to their own keys."""
+        return (self.op, self.dims, self.padded_dims, self.block, self.grid,
+                self.order, self.accumulate, self.dtype, self.out_dtype)
 
 
 # =============================================================================
@@ -778,6 +798,39 @@ def v1_distinct_configs(workload: Workload, hw: HardwareConfig) -> int:
 # Concretization — trace -> KernelParams, for both trace layouts.
 # =============================================================================
 
+# Memo for the default-pipeline concretize path. Keyed purely by value —
+# (workload key, hardware name, schedule signature) — because the function
+# is pure in those inputs: KernelParams is frozen, so sharing one instance
+# across callers is safe. Bounded LRU: the static analyzer's exhaustive DFS
+# can push tens of thousands of distinct traces through ``validate`` per
+# (workload, hardware), so an unbounded dict would grow without limit;
+# evictions only cost a recompute. Cleared by ``clear_concretize_cache``
+# (tests that monkeypatch the intrinsic variant registry must start clean,
+# same contract as ``static_analysis.clear_cache``).
+_CONCRETIZE_CAPACITY = 4096
+_concretize_memo: collections.OrderedDict = collections.OrderedDict()
+_concretize_lock = threading.Lock()
+_concretize_stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def concretize_cache_stats() -> dict:
+    """Snapshot of the concretize memo counters (hits/misses/evictions
+    since process start or the last ``clear_concretize_cache``)."""
+    with _concretize_lock:
+        out = dict(_concretize_stats)
+        out["size"] = len(_concretize_memo)
+        out["capacity"] = _CONCRETIZE_CAPACITY
+        return out
+
+
+def clear_concretize_cache() -> None:
+    """Drop the concretize memo and reset its counters."""
+    with _concretize_lock:
+        _concretize_memo.clear()
+        for k in _concretize_stats:
+            _concretize_stats[k] = 0
+
+
 def concretize(workload: Workload, hw: HardwareConfig, schedule: Schedule,
                postprocessors=DEFAULT_POSTPROCESSORS) -> KernelParams:
     """Replay a schedule trace into concrete kernel parameters.
@@ -786,7 +839,37 @@ def concretize(workload: Workload, hw: HardwareConfig, schedule: Schedule,
     (``bm``/``bn``/``bk``/``br``); v1 flat traces carry ``*_scale``
     decisions interpreted against the variant's base block (the legacy
     formula, unchanged — old database records concretize bit-identically).
+
+    The default-pipeline path is memoized per (workload key, hardware name,
+    schedule signature) in a bounded LRU — concretize is a pure function of
+    those values, and the analytic runner, the tuner's validity/elite
+    checks, dispatch, and the static analyzer all re-derive the same params
+    many times per search. A non-default ``postprocessors`` pipeline
+    bypasses the memo entirely (its verdicts are not a function of the key).
     """
+    if postprocessors is not DEFAULT_POSTPROCESSORS:
+        return _concretize(workload, hw, schedule, postprocessors)
+    key = (workload.key(), hw.name, schedule.signature())
+    with _concretize_lock:
+        cached = _concretize_memo.get(key)
+        if cached is not None:
+            _concretize_memo.move_to_end(key)
+            _concretize_stats["hits"] += 1
+            return cached
+    params = _concretize(workload, hw, schedule, postprocessors)
+    with _concretize_lock:
+        _concretize_stats["misses"] += 1
+        _concretize_memo[key] = params
+        _concretize_memo.move_to_end(key)
+        while len(_concretize_memo) > _CONCRETIZE_CAPACITY:
+            _concretize_memo.popitem(last=False)
+            _concretize_stats["evictions"] += 1
+    return params
+
+
+def _concretize(workload: Workload, hw: HardwareConfig, schedule: Schedule,
+                postprocessors=DEFAULT_POSTPROCESSORS) -> KernelParams:
+    """The uncached concretization body (see :func:`concretize`)."""
     op, dims = workload.op, workload.dims
     ib = dtype_bytes(workload.dtype)
     ob = dtype_bytes(workload.out_dtype)

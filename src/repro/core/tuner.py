@@ -72,6 +72,7 @@ from collections import deque
 from typing import Callable, Mapping, Sequence
 
 from repro.core import space as space_lib
+from repro.core.build_cache import build_cache_stats, stats_delta
 from repro.core.cost_model import (RidgeCostModel, features,
                                    pretrain_from_database)
 from repro.core.database import TuningDatabase
@@ -121,6 +122,14 @@ class TuneResult:
     stopped_early: bool = False
     # extra trials granted from other drivers' released budget
     budget_granted: int = 0
+    # process-wide build-cache counter deltas over this driver's lifetime
+    # (hits/misses/evictions — overlapping when drivers interleave, since
+    # the cache is shared); None when the runner never builds (analytic)
+    # is *not* distinguished — the delta is simply zero then
+    build_cache: dict | None = None
+    # trials settled from the database's cross-session measured-latency
+    # memo instead of being re-measured (reuse_measured=True only)
+    measured_memo: int = 0
 
     @property
     def mean_proposal_entropy(self) -> float:
@@ -201,7 +210,8 @@ class TuneDriver:
                  prior_distributions: Mapping[str, Mapping] | None = None,
                  pretrain_cost_model: bool = False,
                  static_analysis: bool = True,
-                 priority: int = 0):
+                 priority: int = 0,
+                 reuse_measured: bool = False):
         self.workload, self.hw, self.runner = workload, hw, runner
         self.trials = trials
         self.batch = batch
@@ -264,6 +274,16 @@ class TuneDriver:
         self.depth_trace: list[tuple[int, int]] = []
         self.stopped_early = False  # curtailed by a session stop policy
         self.budget_granted = 0  # trials granted from released budget
+        # Cross-session re-measure memo (off by default — reusing a stored
+        # latency changes which candidates get fresh measurements): _take
+        # settles candidates the database already measured at equal
+        # fidelity (same runner name) straight into the history, spending
+        # a trial but never a board slot. Within-session duplicates never
+        # reach the memo — _take's own signature dedup catches them first.
+        self.reuse_measured = bool(reuse_measured) and database is not None
+        self.measured_memo = 0  # trials settled from the database memo
+        # process-wide build-cache snapshot; finish() reports the delta
+        self._build_cache_before = build_cache_stats()
         # pipeline bookkeeping (written by the scheduler loop below)
         self.measure_time_s = 0.0  # runner time across this driver's batches
         self.wait_time_s = 0.0  # main-thread time blocked on this driver
@@ -291,7 +311,9 @@ class TuneDriver:
     # ---- proposal --------------------------------------------------------------
     def _take(self, schedules: Sequence[Schedule]) -> list[Schedule]:
         """Drop already-measured / in-flight / within-batch duplicate
-        candidates, mark the rest in flight, and return them."""
+        candidates, settle any the database memo already holds at equal
+        fidelity (``reuse_measured``), mark the rest in flight, and return
+        them."""
         todo: list[Schedule] = []
         seen: set[tuple] = set()
         for s in schedules:
@@ -299,6 +321,18 @@ class TuneDriver:
             if sig in self.measured or sig in self._in_flight_sigs \
                     or sig in seen:
                 continue
+            if self.reuse_measured:
+                lat = self.database.measured_latency(
+                    self.workload, self.hw.name, s,
+                    runner_name=self.runner.name)
+                if lat is not None:
+                    # a prior session measured this exact concretization on
+                    # a runner of the same name: spend the trial, record
+                    # the stored latency, never occupy a measurement slot
+                    self.measured_memo += 1
+                    self._submitted += 1
+                    self._record(s, lat)
+                    continue
             seen.add(sig)
             todo.append(s)
         for s in todo:
@@ -357,14 +391,21 @@ class TuneDriver:
             self.search.seed_population(
                 [s for s, _ in self.history] + list(self._in_flight))
             self._population_seeded = True
-        if self._submitted >= self.trials:
-            return None
-        self.search.evolve(self.cost_model, self._elites())
-        proposals = self.search.propose(
-            min(self.batch, self.trials - self._submitted),
-            exclude=set(self.measured) | self._in_flight_sigs)
-        todo = self._take(proposals)
-        return todo or None
+        while self._submitted < self.trials:
+            self.search.evolve(self.cost_model, self._elites())
+            proposals = self.search.propose(
+                min(self.batch, self.trials - self._submitted),
+                exclude=set(self.measured) | self._in_flight_sigs)
+            before = self._submitted
+            todo = self._take(proposals)
+            if todo:
+                return todo
+            if self._submitted == before:
+                # nothing taken and nothing memo-settled: the search has no
+                # fresh candidates to offer (a memo-settled round spends
+                # budget without producing a batch — keep evolving)
+                return None
+        return None
 
     # ---- reconciliation --------------------------------------------------------
     def reconcile(self, schedules: Sequence[Schedule],
@@ -479,7 +520,10 @@ class TuneDriver:
             proposal_entropy=entropy, static_pruned=self.static_pruned,
             depth_trace=list(self.depth_trace),
             stopped_early=self.stopped_early,
-            budget_granted=self.budget_granted)
+            budget_granted=self.budget_granted,
+            build_cache=stats_delta(build_cache_stats(),
+                                    self._build_cache_before),
+            measured_memo=self.measured_memo)
 
 
 def timed_run_batch(runner: Runner, driver: TuneDriver,
@@ -606,7 +650,8 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
          static_analysis: bool = True,
          adaptive_depth: bool = False,
          max_depth: int = 8,
-         priority: int = 0) -> TuneResult:
+         priority: int = 0,
+         reuse_measured: bool = False) -> TuneResult:
     """Tune one workload. ``pipeline_depth`` bounds how many proposed batches
     may be in flight at once (1 = fully synchronous; see module docstring for
     the determinism guarantees of the pipelined mode); ``adaptive_depth``
@@ -614,7 +659,10 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
     the effective depth up to ``max_depth`` where the backend would
     otherwise idle (off by default: fixed-seed histories then stay
     bit-identical to the fixed-depth executor); ``priority`` tags this
-    search's batches for priority-aware backends; the ``learn_*`` /
+    search's batches for priority-aware backends; ``reuse_measured`` (off
+    by default) settles candidates the database already measured at equal
+    fidelity from the stored latency instead of re-measuring them
+    (``TuneResult.measured_memo`` counts them); the ``learn_*`` /
     ``prior_distributions`` / ``pretrain_cost_model`` knobs are documented
     on :class:`TuneDriver`."""
     driver = TuneDriver(workload, hw, runner, trials=trials, seed=seed,
@@ -624,7 +672,8 @@ def tune(workload: Workload, hw: HardwareConfig, runner: Runner,
                         prior_distributions=prior_distributions,
                         pretrain_cost_model=pretrain_cost_model,
                         static_analysis=static_analysis,
-                        priority=priority)
+                        priority=priority,
+                        reuse_measured=reuse_measured)
     depth = effective_pipeline_depth(runner, pipeline_depth)
     if pipeline_depth <= 1:
         while (batch_s := driver.propose()) is not None:

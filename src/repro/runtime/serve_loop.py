@@ -72,10 +72,19 @@ class Server:
     ``hw`` + ``serve_ops`` attach the dispatch layer: every ``generate``
     resolves each serve op through the four-rung chain against ``database``
     (default: the hot-swapping ``global_database()``) and records misses
-    into ``traffic`` — the serving side of the continuous-tuning loop."""
+    into ``traffic`` — the serving side of the continuous-tuning loop.
+
+    ``build_kernels=True`` additionally builds each resolved schedule's
+    Pallas kernel (interpret mode) during the dispatch pass. Builds go
+    through the content-addressed process-wide
+    :class:`~repro.core.build_cache.BuildCache`, so only the *first*
+    resolution of each distinct concrete lowering pays the build — steady
+    state (the same ops resolving to the same schedules, generate after
+    generate) performs zero builds, which ``--suite cache`` asserts."""
 
     def __init__(self, bundle: ModelBundle, params, max_len: int = 256,
-                 hw=None, serve_ops=None, traffic=None, database=None):
+                 hw=None, serve_ops=None, traffic=None, database=None,
+                 build_kernels: bool = False):
         self.bundle = bundle
         self.params = params
         self.max_len = max_len
@@ -83,6 +92,7 @@ class Server:
         self.serve_ops = list(serve_ops or ())
         self.traffic = traffic
         self.database = database
+        self.build_kernels = build_kernels
         self._decode = jax.jit(
             lambda p, c, t, pos: bundle.decode_fn(p, c, t, pos))
 
@@ -97,12 +107,30 @@ class Server:
 
         counts: dict[str, int] = {}
         for count, wl in self.serve_ops:
-            _, provenance = best_schedule(wl, self.hw,
-                                          database=self.database,
-                                          traffic=self.traffic,
-                                          count=count)
+            sched, provenance = best_schedule(wl, self.hw,
+                                              database=self.database,
+                                              traffic=self.traffic,
+                                              count=count)
             counts[provenance] = counts.get(provenance, 0) + count
+            if self.build_kernels and sched is not None:
+                self._build_kernel(wl, sched)
         return counts
+
+    def _build_kernel(self, wl: Workload, sched) -> None:
+        """Build one resolved op's kernel through the process-wide build
+        cache (a repeat of an already-built signature is a cache hit, no
+        build). An "xla" resolution never reaches here (sched is None) and
+        a schedule that doesn't concretize on this shape is skipped — the
+        dispatch pass must keep serving even when a kernel can't build."""
+        from repro import kernels
+        from repro.core import space as space_lib
+
+        try:
+            params = space_lib.concretize(wl, self.hw, sched)
+            if params.valid:
+                kernels.build(wl, params, interpret=True)
+        except Exception:
+            pass
 
     def generate(self, prompts: np.ndarray, n_steps: int,
                  extra_batch: dict | None = None) -> GenerationResult:

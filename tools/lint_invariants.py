@@ -22,6 +22,16 @@ makes the hazards structural errors in CI instead of flaky-test archaeology:
                        — iteration order of a set is salted per process,
                        and a dict built in varying order silently reorders
                        the candidate list behind a "deterministic" draw.
+- ``identity-cache-key`` cache-key construction from object *identity*
+                       instead of value: any ``id(...)`` call (identity is
+                       process- and allocation-dependent — two equal
+                       schedules get different keys, and a recycled address
+                       silently aliases two different ones), and
+                       ``repr(...)`` used as a subscript/lookup key (the
+                       default ``object.__repr__`` embeds the address;
+                       content keys must come from explicit signatures —
+                       ``Schedule.signature()`` / ``KernelParams
+                       .signature()`` — see ``core/build_cache.py``).
 - ``policy-wall-clock`` ANY clock call — including the otherwise-blessed
                        ``time.monotonic()`` / ``time.perf_counter()`` —
                        inside a class named ``*Policy`` or ``*Ledger``.
@@ -118,6 +128,32 @@ class _Visitor(ast.NodeVisitor):
                 return name
         return None
 
+    @staticmethod
+    def _calls_repr(node: ast.AST) -> bool:
+        """Does any subexpression call repr() (or __repr__ directly)?
+        f-string ``!r`` conversions count too — they lower to the same
+        default repr."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                if isinstance(sub.func, ast.Name) and sub.func.id == "repr":
+                    return True
+                if isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr == "__repr__":
+                    return True
+            if isinstance(sub, ast.FormattedValue) and sub.conversion == 114:
+                return True  # f"{x!r}"
+        return False
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        # cache[repr(x)] / cache[(repr(a), b)]: a default repr embedding
+        # the object address is an identity key in value-key clothing
+        if self._calls_repr(node.slice):
+            self._flag(node, "identity-cache-key",
+                       "repr(...) inside a subscript key: the default "
+                       "object.__repr__ embeds the address; use an "
+                       "explicit value-derived signature instead")
+        self.generic_visit(node)
+
     def visit_Call(self, node: ast.Call) -> None:
         chain = _dotted(node.func)
         joined = ".".join(chain)
@@ -155,6 +191,22 @@ class _Visitor(ast.NodeVisitor):
                            f"(e.g. MeasureScheduler.busy_fraction), never "
                            f"a live clock — adaptive runs must replay "
                            f"under a scripted clock")
+        # -- identity-cache-key (id) --
+        if chain == ["id"]:
+            self._flag(node, "identity-cache-key",
+                       "id() keys on object identity, not value — two "
+                       "equal schedules get different keys and a recycled "
+                       "address aliases different ones; build content keys "
+                       "from signatures (Schedule.signature() / "
+                       "KernelParams.signature())")
+        # -- identity-cache-key (repr used as a lookup key) --
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("get", "setdefault", "pop") \
+                and node.args and self._calls_repr(node.args[0]):
+            self._flag(node, "identity-cache-key",
+                       "repr(...) as a lookup key: the default "
+                       "object.__repr__ embeds the address; use an "
+                       "explicit value-derived signature instead")
         # -- dict-order-rng --
         if isinstance(node.func, ast.Attribute) \
                 and node.func.attr in RNG_DRAW_METHODS \
